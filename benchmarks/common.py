@@ -1,0 +1,92 @@
+"""Shared benchmark utilities.
+
+Three execution modes mirror the paper's comparison (Table 2 / Fig. 7):
+  TF-mode   -- every memory-intensive op dispatched as its own kernel
+               (the paper's naive-TensorFlow analogue),
+  XLA-mode  -- the rule-based XLA fusion simulator (repro.core.planner
+               .xla_baseline_plan): thread-local reuse only, reduce /
+               expensive ops never mid-fusion,
+  FS-mode   -- the FusionStitching planner (make_plan).
+
+Structural metrics (kernel counts, HBM traffic) come from the plans and
+are hardware-independent; modeled latencies use the calibrated TPU-v5e
+cost model; measured wall-times on this CPU host quantify the dispatch
+overhead analogue (op-by-op vs whole-jit).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import V5E, best_estimate, make_plan, plan_stats, trace
+from repro.core.ir import FUSIBLE_KINDS, OpKind
+from repro.core.planner import plan_latency, xla_baseline_plan
+from repro.core.tracer import bind_node
+
+
+@dataclass
+class ModeStats:
+    kernels: int
+    hbm_bytes: int
+    modeled_latency_s: float
+
+
+def three_mode_stats(graph) -> dict[str, ModeStats]:
+    from repro.core.ir import FusionPlan, Pattern
+
+    unfused = FusionPlan([Pattern(frozenset({n}), 0.0)
+                          for n in graph.fusible_nodes()])
+    xla = xla_baseline_plan(graph)
+    fs = make_plan(graph)
+
+    out = {}
+    for name, plan in (("tf", unfused), ("xla", xla), ("fs", fs)):
+        s = plan_stats(graph, plan,
+                       composition="thread" if name != "fs" else "auto")
+        out[name] = ModeStats(
+            kernels=s.n_kernels_stitched,
+            hbm_bytes=s.hbm_bytes_stitched,
+            modeled_latency_s=plan_latency(
+                graph, plan,
+                composition="thread" if name != "fs" else "auto"),
+        )
+    return out
+
+
+def run_op_by_op(graph, *inputs):
+    """TF-analogue execution: one jitted dispatch per node."""
+    env = dict(zip(graph.inputs, inputs))
+    jits = {}
+    for nid in graph.topo_order():
+        node = graph.node(nid)
+        if nid in env:
+            continue
+        if node.kind is OpKind.CONST:
+            env[nid] = node.value
+            continue
+        invals = [env[i] if i in env else graph.node(i).value
+                  for i in node.inputs]
+        fn = jits.setdefault(nid, jax.jit(
+            lambda *a, _n=node: bind_node(_n, list(a))))
+        env[nid] = fn(*invals)
+    return [env[o] for o in graph.outputs]
+
+
+def timeit(fn, *args, warmup: int = 3, iters: int = 20) -> float:
+    """Median wall time in seconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,72 @@
+"""Render the §Dry-run and §Roofline tables into EXPERIMENTS.md from the
+dry-run JSONL (between the HTML-comment markers).
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+
+from .roofline import RESULTS, analyze, load, table, to_markdown
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    byk = {(r["arch"], r["shape"], r.get("mesh")): r for r in recs
+           if (r.get("tags") or "") == "" and r.get("status") != "skipped"}
+    out = ["| arch | shape | 16x16 | 2x16x16 | compile(s) | params/device MiB | notes |",
+           "|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_applicable(cfg, SHAPES[shape])
+            if not ok:
+                out.append(f"| {arch} | {shape} | skip | skip | — | — | {why} |")
+                continue
+            cells = []
+            compile_s = "—"
+            arg_mb = "—"
+            for mesh in ("16x16", "2x16x16"):
+                r = byk.get((arch, shape, mesh))
+                if r is None:
+                    cells.append("?")
+                    continue
+                cells.append("✓" if r.get("status") == "ok" else "FAIL")
+                if mesh == "16x16" and r.get("status") == "ok":
+                    compile_s = f"{r.get('compile_s', 0):.1f}"
+                    if "argument_size_in_bytes" in r:
+                        arg_mb = f"{r['argument_size_in_bytes']/2**20:.0f}"
+            out.append(f"| {arch} | {shape} | {cells[0]} | {cells[1]} "
+                       f"| {compile_s} | {arg_mb} | |")
+    n_ok = sum(1 for r in byk.values() if r.get("status") == "ok")
+    out.append("")
+    out.append(f"Compiled cells: **{n_ok}** (of 62 runnable = 31 cells x 2 "
+               f"meshes); source: `{os.path.basename(RESULTS)}`.")
+    return "\n".join(out)
+
+
+def _splice(text: str, start: str, end: str, payload: str) -> str:
+    pat = re.compile(re.escape(start) + r".*?" + re.escape(end), re.S)
+    return pat.sub(start + "\n" + payload + "\n" + end, text)
+
+
+def main() -> None:
+    recs = load()
+    text = open(EXP).read()
+    text = _splice(text, "<!-- DRYRUN_TABLE_START -->",
+                   "<!-- DRYRUN_TABLE_END -->", dryrun_table(recs))
+    rl = table(recs, mesh="16x16")
+    text = _splice(text, "<!-- ROOFLINE_TABLE_START -->",
+                   "<!-- ROOFLINE_TABLE_END -->", to_markdown(rl))
+    open(EXP, "w").write(text)
+    print(f"rendered {len(rl)} roofline rows into EXPERIMENTS.md "
+          f"from {RESULTS}")
+
+
+if __name__ == "__main__":
+    main()

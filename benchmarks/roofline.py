@@ -1,0 +1,170 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads ``results/dryrun_results.jsonl`` (written by repro.launch.dryrun)
+and derives the three per-device roofline terms per (arch x shape):
+
+  compute    = HLO_FLOPs_per_device / peak_bf16          (197 TFLOP/s)
+  memory     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+  collective = collective_bytes_per_device / ICI_bw      (50 GB/s/link)
+
+cost_analysis() is per-device post-SPMD, so the task formula's
+"HLO_FLOPs / (chips x peak)" equals our per-device value / peak.
+MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill/encoder forward) and
+2*N*D (decode, D = batch tokens), with N_active for MoE.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+_FINAL = os.path.join(_DIR, "dryrun_final.jsonl")
+RESULTS = _FINAL if os.path.exists(_FINAL) else os.path.join(
+    _DIR, "dryrun_results.jsonl")
+
+
+def model_flops_per_device(rec: dict) -> float:
+    n = rec.get("active_params") or rec.get("params") or 0
+    gb, seq = _cell_dims(rec["shape"])
+    if rec["kind"] == "train":
+        total = 6.0 * n * gb * seq
+    elif rec["kind"] == "prefill":
+        total = 2.0 * n * gb * seq
+    else:  # decode: one token per sequence
+        total = 2.0 * n * gb
+    return total / max(rec.get("n_devices", 1), 1)
+
+
+def _cell_dims(shape_name: str):
+    from repro.configs.base import SHAPES
+    c = SHAPES[shape_name]
+    return c.global_batch, c.seq_len
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / the binding term: how close the step is
+        to the ideal where MODEL_FLOPS runs at peak with nothing else
+        binding."""
+        ideal = self.model_flops / PEAK
+        return ideal / self.bound_time if self.bound_time > 0 else 0.0
+
+
+LEVERS = {
+    "compute": "cut non-useful FLOPs: relax remat policy / drop GSPMD "
+               "head padding / cast more matmuls to bf16",
+    "memory": "raise arithmetic intensity: larger per-device batch, fuse "
+              "ew chains (stitching), keep KV cache in bf16",
+    "collective": "reshape comms: reduce-scatter + all-gather instead of "
+                  "all-reduce, overlap via async collectives, move "
+                  "activation sharding to SP to kill per-layer re-gathers",
+}
+
+
+def load(path: str = RESULTS, *, dedupe: bool = True) -> list[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    if dedupe:  # keep the latest record per (arch, shape, mesh, fusion)
+        byk = {}
+        for r in recs:
+            byk[(r["arch"], r["shape"], r.get("mesh"), r.get("fusion_mode"),
+                 r.get("tags", ""))] = r
+        recs = list(byk.values())
+    return recs
+
+
+def analyze(rec: dict) -> Roofline | None:
+    if rec.get("status") != "ok":
+        return None
+    mf = model_flops_per_device(rec)
+    hf = rec.get("flops", -1)
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        t_compute=hf / PEAK,
+        t_memory=rec.get("bytes_accessed", 0) / HBM,
+        t_collective=rec.get("collective_total", 0) / ICI,
+        model_flops=mf, hlo_flops=hf,
+        useful_ratio=mf / hf if hf > 0 else 0.0,
+    )
+
+
+def table(recs: list[dict], *, mesh: str = "16x16",
+          tags: str = "") -> list[Roofline]:
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        if (r.get("tags") or "") != tags:
+            continue
+        rl = analyze(r)
+        if rl:
+            rows.append(rl)
+    rows.sort(key=lambda r: (r.arch, r.shape))
+    return rows
+
+
+def to_markdown(rows: list[Roofline]) -> str:
+    out = ["| arch | shape | compute(s) | memory(s) | collective(s) | "
+           "dominant | MODEL/HLO | roofline-frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.t_compute:.3g} | {r.t_memory:.3g} "
+            f"| {r.t_collective:.3g} | **{r.dominant}** "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction:.3f} |")
+    return "\n".join(out)
+
+
+def run() -> list[str]:
+    from .common import csv_row
+    if not os.path.exists(RESULTS):
+        return [csv_row("roofline", -1, "no dryrun_results.jsonl; run "
+                        "python -m repro.launch.dryrun --all first")]
+    rows = table(load())
+    out = []
+    for r in rows:
+        out.append(csv_row(
+            f"roofline_{r.arch}_{r.shape}", r.bound_time * 1e6,
+            f"dom={r.dominant}; frac={r.roofline_fraction:.3f}; "
+            f"useful={r.useful_ratio:.2f}; lever: {LEVERS[r.dominant]}"))
+    if rows:
+        worst = min(rows, key=lambda r: r.roofline_fraction)
+        out.append(csv_row("roofline_worst", worst.bound_time * 1e6,
+                           f"{worst.arch} x {worst.shape} "
+                           f"frac={worst.roofline_fraction:.3f} "
+                           f"dom={worst.dominant}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

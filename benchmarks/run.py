@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1|table2|fig7|overhead|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["fig1", "table2", "fig7", "overhead", "roofline"])
+    args = ap.parse_args()
+
+    from . import (bench_fig1_layernorm, bench_fig7_speedup,
+                   bench_overhead, bench_table2_breakdown, roofline)
+
+    suites = {
+        "fig1": bench_fig1_layernorm.run,
+        "table2": bench_table2_breakdown.run,
+        "fig7": bench_fig7_speedup.run,
+        "overhead": bench_overhead.run,
+        "roofline": roofline.run,
+    }
+    selected = [args.only] if args.only else list(suites)
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for name in selected:
+        try:
+            for row in suites[name]():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},-1,SUITE ERROR {type(e).__name__}: {e}",
+                  flush=True)
+    print(f"# total {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Compiler walkthrough: what the fusion explorer + code generator do to
+a real transformer sub-block (gemma-style RMSNorm + GeGLU epilogue).
+
+Shows: traced IR, XLA-baseline plan vs FusionStitching plan, chosen
+schedules, VMEM scratch sharing, and the cost-model's view.
+
+    PYTHONPATH=src python examples/compiler_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import best_estimate, make_plan, plan_stats, trace
+from repro.core.memory_planner import plan_scratch
+from repro.core.planner import plan_latency, xla_baseline_plan
+from repro.core.rowspec import analyze
+
+
+def gemma_epilogue(x, g_norm, h_gate, h_up):
+    """RMSNorm -> tanh-GELU gate * up (expensive-ew mid-chain, paper §4.1)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(ms + 1e-6) * g_norm
+    gate = 0.5 * h_gate * (1 + jnp.tanh(
+        0.79788456 * (h_gate + 0.044715 * h_gate ** 3)))
+    return xn + gate * h_up
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, C = 8192, 3072
+    x = rng.standard_normal((B, C)).astype(np.float32)
+    g = rng.standard_normal(C).astype(np.float32)
+    hg = rng.standard_normal((B, C)).astype(np.float32)
+    hu = rng.standard_normal((B, C)).astype(np.float32)
+
+    G = trace(gemma_epilogue, x, g, hg, hu)
+    print("=== traced IR ===")
+    print(G.pprint())
+
+    xla = xla_baseline_plan(G)
+    fs = make_plan(G)
+    sx = plan_stats(G, xla, composition="thread")
+    sf = plan_stats(G, fs)
+    print("\n=== plans ===")
+    print(f"XLA baseline : {sx.n_kernels_stitched} kernels, "
+          f"{sx.hbm_bytes_stitched/2**20:.0f} MiB traffic "
+          f"(tanh mid-chain forces a split)")
+    print(f"FusionStitch : {sf.n_kernels_stitched} kernels, "
+          f"{sf.hbm_bytes_stitched/2**20:.0f} MiB traffic")
+
+    print("\n=== per-pattern schedule choice (latency-evaluator §4.3) ===")
+    for pat in fs.patterns:
+        est = best_estimate(G, pat.members)
+        info = analyze(G, pat.members)
+        line = (f"pattern {sorted(pat.members)[:6]}..: schedule={est.schedule} "
+                f"block_rows={est.block_rows} "
+                f"modeled={est.latency_s*1e6:.0f}us")
+        if info is not None:
+            scr = plan_scratch(G, pat.members, info)
+            line += (f" | scratch {scr.total_bytes}B/row "
+                     f"(naive {scr.naive_bytes}B, "
+                     f"reuse x{1/max(scr.reuse_ratio,1e-9):.1f})")
+        print(line)
+
+    print("\n=== modeled end-to-end (TPU v5e terms) ===")
+    t_x = plan_latency(G, xla, composition="thread")
+    t_f = plan_latency(G, fs)
+    print(f"XLA {t_x*1e6:.0f}us vs FS {t_f*1e6:.0f}us "
+          f"-> {t_x/t_f:.2f}x (paper reports 1.45x avg end-to-end)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: stitch a memory-intensive function into one Pallas kernel.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stitched_jit
+
+
+def layer_norm(x, gamma, beta):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-6) * gamma + beta
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4096, 1024)).astype(np.float32)
+    g = rng.standard_normal(1024).astype(np.float32)
+    b = rng.standard_normal(1024).astype(np.float32)
+
+    # 1. wrap -> trace -> explore -> plan -> emit stitched kernels
+    fused = stitched_jit(layer_norm)
+    y = fused(x, g, b)
+    assert np.allclose(np.asarray(y), np.asarray(layer_norm(x, g, b)),
+                       atol=1e-4)
+
+    # 2. inspect what the compiler did (paper Fig. 1: 16 ops -> 1 kernel)
+    rep = fused.report(x, g, b)
+    s = rep.stats
+    print(f"ops in graph:            {s.n_fusible}")
+    print(f"kernels unfused (TF):    {s.n_kernels_unfused}")
+    print(f"kernels stitched (FS):   {s.n_kernels_stitched}")
+    print(f"  of which Pallas:       {rep.n_pallas} (block composition)")
+    print(f"HBM traffic unfused:     {s.hbm_bytes_unfused/2**20:.1f} MiB")
+    print(f"HBM traffic stitched:    {s.hbm_bytes_stitched/2**20:.1f} MiB "
+          f"({s.hbm_bytes_unfused/s.hbm_bytes_stitched:.1f}x less)")
+    print(f"VMEM scratch (shared):   {rep.scratch_bytes} B/row "
+          f"vs naive {rep.scratch_naive_bytes} B/row (paper §4.4)")
+    print(f"plan time:               {rep.plan_time_s*1e3:.0f} ms "
+          f"(tune once, run many)")
+
+    # 3. gradients flow through stitched kernels
+    fused_d = stitched_jit(layer_norm, differentiable=True)
+    grads = jax.grad(lambda *a: jnp.sum(fused_d(*a) ** 2), argnums=(1, 2))(
+        x, g, b)
+    print(f"grad check: dgamma norm = {float(jnp.linalg.norm(grads[0])):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Batched serving example: prefill a batch of prompts, decode with
+KV/SSM caches, compare dense vs attention-free decode behavior.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import build_model
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ("llama3.2-3b", "mamba2-370m"):
+        cfg = get_config(arch).reduced()
+        mdl = build_model(cfg, fusion_mode="xla")
+        params = mdl.init(jax.random.PRNGKey(0))
+
+        B, S, G = 4, 48, 24
+        prompts = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+
+        t0 = time.perf_counter()
+        seqs = generate(mdl, params, prompts, G)
+        dt = time.perf_counter() - t0
+        assert seqs.shape == (B, S + G)
+        cache_kind = "SSM state (O(1) per token)" if cfg.family == "ssm" \
+            else "KV cache (O(S) per token)"
+        print(f"{arch:16s} batch={B} prompt={S} gen={G}: {dt:5.1f}s "
+              f"| {cache_kind}")
+        print(f"  sample continuation: {seqs[0, S:S+8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

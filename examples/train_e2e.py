@@ -1,0 +1,71 @@
+"""End-to-end training driver example.
+
+Default (CPU-friendly): a ~13M-param llama3.2-family model, 200 steps of
+AdamW on the synthetic pipeline with checkpoint/restart enabled — loss
+drops by >1.5 nats.  ``--hundred-m`` scales the same config to ~100M
+params (same code path; a few hundred steps take hours on this 1-core
+host, minutes on any accelerator).
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200] [--hundred-m]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokens
+from repro.launch.train import build_trainer
+from repro.runtime import RestartableLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+
+    base = get_config("llama3.2-3b")
+    if args.hundred_m:
+        cfg = base.reduced(d_model=512, n_layers=8, n_heads=8, n_kv_heads=4,
+                           head_dim=64, d_ff=2048, vocab_size=32000,
+                           max_seq=2048)
+    else:
+        cfg = base.reduced(d_model=256, n_layers=4, n_heads=8, n_kv_heads=4,
+                           head_dim=32, d_ff=1024, vocab_size=8192,
+                           max_seq=1024)
+
+    mdl, init_state, train_step = build_trainer(
+        cfg, fusion_mode="xla", lr=1e-3, total_steps=args.steps)
+    print(f"params: {mdl.param_count()/1e6:.1f}M")
+
+    data = SyntheticTokens(
+        DataConfig(seed=0, global_batch=args.batch, seq_len=args.seq), cfg)
+    state = init_state(jax.random.PRNGKey(0))
+    loop = RestartableLoop(args.ckpt_dir, ckpt_every=50)
+
+    losses = []
+
+    def on_step(step, state, dt, slow):
+        m = train_step.last_metrics
+        losses.append(m["loss"])
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={m['loss']:.4f} "
+                  f"lr={m['lr']:.2e} {dt*1e3:6.0f}ms", flush=True)
+
+    t0 = time.perf_counter()
+    state, monitor = loop.run(state, data, train_step, args.steps,
+                              on_step=on_step)
+    dt = time.perf_counter() - t0
+    print(f"\n{args.steps} steps in {dt:.0f}s "
+          f"({args.batch*args.seq*args.steps/dt:.0f} tok/s)")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(drop {losses[0]-losses[-1]:.2f} nats)")
+    assert losses[-1] < losses[0] - 1.0, "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Atomic, async, elastic checkpointing."""
+from . import manager
+
+__all__ = ["manager"]

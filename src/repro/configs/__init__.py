@@ -1,0 +1,5 @@
+"""Assigned-architecture configs + registry."""
+from .base import ARCH_IDS, SHAPES, ArchConfig, ShapeCell, all_configs, cell_applicable, get_config
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "ShapeCell", "all_configs",
+           "cell_applicable", "get_config"]

@@ -1,0 +1,11 @@
+"""Granite-3.0-1B-A400M MoE: 32 experts top-8 [hf:ibm-granite]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size=49155,
+    n_experts=32, top_k=8,
+    moe_impl="sort", moe_ep="replicate",   # optimized dispatch (EXPERIMENTS §Perf)
+    activation="silu", norm="rmsnorm",
+)

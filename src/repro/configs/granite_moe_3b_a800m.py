@@ -1,0 +1,11 @@
+"""Granite-3.0-3B-A800M MoE: 40 experts top-8 [hf:ibm-granite]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size=49155,
+    n_experts=40, top_k=8,
+    moe_impl="sort", moe_ep="replicate",   # optimized dispatch (EXPERIMENTS §Perf)
+    activation="silu", norm="rmsnorm",
+)

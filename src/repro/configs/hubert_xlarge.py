@@ -1,0 +1,16 @@
+"""HuBERT-XLarge encoder (w2v2 arch) [arXiv:2106.07447; unverified].
+
+Encoder-only: no decode shapes (see DESIGN.md §Arch-applicability).  The
+7-layer conv feature extractor is a STUB: ``input_specs`` provides frame
+features of dim ``frontend_dim`` which ``feat_proj`` maps to d_model.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge", family="encoder",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504,
+    activation="gelu_mlp", norm="layernorm",
+    frontend="audio", frontend_dim=512,
+    causal=False, supports_decode=False,
+)

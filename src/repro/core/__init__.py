@@ -1,0 +1,14 @@
+"""FusionStitching core: the paper's contribution as a composable JAX module."""
+from .cost_model import Hardware, V5E, best_estimate, delta_evaluator
+from .ir import FusionPlan, Graph, Node, OpKind, Pattern
+from .planner import make_plan, plan_stats
+from .stitch import StitchedFunction, fusion_report, stitched_jit
+from .tracer import trace
+
+__all__ = [
+    "Hardware", "V5E", "best_estimate", "delta_evaluator",
+    "FusionPlan", "Graph", "Node", "OpKind", "Pattern",
+    "make_plan", "plan_stats",
+    "StitchedFunction", "fusion_report", "stitched_jit",
+    "trace",
+]

@@ -1,0 +1,105 @@
+"""Primitive classification + per-op VPU cost table.
+
+Mirrors the paper's three fusible classes (§4): *light element-wise*,
+*expensive element-wise*, *reduction*.  The cost multipliers replace the
+paper's CUDA CPI tables [21, 22] with a TPU VPU model: cost 1.0 == one
+8x128 vector ALU op; transcendentals dispatch to the XLU/pop-count style
+slow paths and cost a calibrated multiple.
+"""
+from __future__ import annotations
+
+from .ir import OpKind
+
+# --------------------------------------------------------------------------
+# primitive name -> OpKind
+# --------------------------------------------------------------------------
+# div / integer_pow / rem are classified light for *fusion legality* (XLA
+# duplicates them freely, and the paper's expensive set is transcendental:
+# "reduction, tan, log, et al."); their VPU *cost* stays elevated below.
+_LIGHT = {
+    "add", "sub", "mul", "neg", "abs", "max", "min", "and", "or", "xor",
+    "not", "eq", "ne", "ge", "gt", "le", "lt", "select_n", "sign",
+    "floor", "ceil", "round", "clamp", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "rem", "convert_element_type", "bitcast_convert_type",
+    "copy", "stop_gradient", "is_finite", "nextafter", "real", "imag",
+    "square", "div", "integer_pow",
+    # data-movement ops the paper treats as memory-intensive and fusible
+    # (they join *packed* patterns; the row-stitched Pallas emitter skips
+    # them via EMITTABLE_PRIMS): RoPE et al. stop costing a kernel each.
+    "concatenate", "slice", "iota", "pad", "rev",
+}
+_EXPENSIVE = {
+    "exp", "exp2", "expm1", "log", "log2", "log1p", "tanh", "sin", "cos",
+    "tan", "asin", "acos", "atan", "atan2", "sinh", "cosh", "asinh",
+    "acosh", "atanh", "logistic", "erf", "erfc", "erf_inv", "rsqrt",
+    "sqrt", "cbrt", "pow", "digamma", "lgamma",
+}
+_REDUCE = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "reduce_and", "reduce_or",
+}
+_BROADCAST = {"broadcast_in_dim"}
+_RESHAPE = {"reshape", "squeeze", "expand_dims"}
+_TRANSPOSE = {"transpose"}
+
+# Everything else (dot_general, conv, gather, scatter, cumsum, sort,
+# dynamic_slice, iota, rng, while/scan/cond, argmax, ...) is OPAQUE: a
+# fusion boundary, exactly like the paper treats GEMM/conv and ops its
+# code generator cannot stitch.
+
+
+def classify(prim_name: str) -> OpKind:
+    if prim_name in _LIGHT:
+        return OpKind.LIGHT_EW
+    if prim_name in _EXPENSIVE:
+        return OpKind.EXPENSIVE_EW
+    if prim_name in _REDUCE:
+        return OpKind.REDUCE
+    if prim_name in _BROADCAST:
+        return OpKind.BROADCAST
+    if prim_name in _RESHAPE:
+        return OpKind.RESHAPE
+    if prim_name in _TRANSPOSE:
+        return OpKind.TRANSPOSE
+    return OpKind.OPAQUE
+
+
+# --------------------------------------------------------------------------
+# VPU cost multipliers (CPI-table analogue).  Unit: vector-ALU-op equivalents
+# per element.  Calibrated against public TPU microbenchmarks: transcendental
+# ops cost ~10-20 vector ops on the VPU's slow path.
+# --------------------------------------------------------------------------
+_VPU_COST: dict[str, float] = {
+    # light
+    **{p: 1.0 for p in _LIGHT},
+    "convert_element_type": 0.5,
+    "copy": 0.0,
+    "stop_gradient": 0.0,
+    # expensive
+    "div": 4.0,
+    "rem": 4.0,
+    "sqrt": 8.0,
+    "rsqrt": 8.0,
+    "cbrt": 12.0,
+    "exp": 14.0, "exp2": 12.0, "expm1": 16.0,
+    "log": 14.0, "log2": 12.0, "log1p": 16.0,
+    "logistic": 16.0,
+    "tanh": 16.0, "sinh": 18.0, "cosh": 18.0,
+    "erf": 18.0, "erfc": 18.0, "erf_inv": 24.0,
+    "sin": 20.0, "cos": 20.0, "tan": 24.0,
+    "asin": 24.0, "acos": 24.0, "atan": 24.0, "atan2": 28.0,
+    "asinh": 24.0, "acosh": 24.0, "atanh": 24.0,
+    "pow": 24.0, "integer_pow": 3.0,
+    "digamma": 40.0, "lgamma": 40.0,
+    # reduction: cost per *input* element
+    **{p: 1.0 for p in _REDUCE},
+    # layout
+    "broadcast_in_dim": 0.25,
+    "reshape": 0.0, "squeeze": 0.0, "expand_dims": 0.0,
+    "transpose": 1.0,
+}
+
+
+def vpu_cost(prim_name: str) -> float:
+    """Vector-op-equivalents per element for ``prim_name`` (default 1.0)."""
+    return _VPU_COST.get(prim_name, 1.0)

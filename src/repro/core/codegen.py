@@ -1,0 +1,485 @@
+"""Stitched-kernel code generation (paper §4).
+
+``emit_pattern`` compiles one fusion pattern into a single Pallas TPU
+kernel implementing the *block composition* scheme: the whole reduce row
+plus every intermediate lives in VMEM for one grid cell, consumers read
+staged values instead of recomputing them (paper §4.1).  Grouping +
+schedule enumeration (§4.2) is realized by the latency-evaluator sweep
+over block-row launch dims in ``cost_model.best_estimate`` plus the
+stage-vs-recompute choice for expensive sub-roots below.
+
+Patterns without a consistent row view fall back to *kernel packing*:
+the subgraph runs as one fused XLA computation (single launch), which is
+the paper's packing scheme realized with the native compiler.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .cost_model import Hardware, KernelEstimate, V5E, best_estimate
+from .ir import Graph, OpKind
+from .memory_planner import plan_scratch
+from .rowspec import Role, RowInfo, analyze
+from .tracer import bind_node
+
+# --------------------------------------------------------------------------
+# in-kernel op table: prim name -> block-level implementation
+# --------------------------------------------------------------------------
+def _select_n(which, *cases):
+    if len(cases) == 2:
+        return jnp.where(which, cases[1], cases[0])
+    out = cases[0]
+    for i, c in enumerate(cases[1:], start=1):
+        out = jnp.where(which == i, c, out)
+    return out
+
+
+_OPS: dict[str, Callable] = {
+    "add": lax.add, "sub": lax.sub, "mul": lax.mul, "div": lax.div,
+    "max": lax.max, "min": lax.min, "neg": lax.neg, "abs": lax.abs,
+    "sign": lax.sign, "floor": lax.floor, "ceil": lax.ceil,
+    "round": lambda x: lax.round(x, lax.RoundingMethod.TO_NEAREST_EVEN),
+    "exp": lax.exp, "exp2": lax.exp2, "expm1": lax.expm1,
+    "log": lax.log, "log1p": lax.log1p,
+    "tanh": lax.tanh, "sin": lax.sin, "cos": lax.cos,
+    "logistic": lax.logistic, "erf": lax.erf, "erfc": lax.erfc,
+    "rsqrt": lax.rsqrt, "sqrt": lax.sqrt, "cbrt": lax.cbrt,
+    "pow": lax.pow, "square": lax.square,
+    "eq": lax.eq, "ne": lax.ne, "ge": lax.ge, "gt": lax.gt,
+    "le": lax.le, "lt": lax.lt,
+    "and": lax.bitwise_and, "or": lax.bitwise_or,
+    "xor": lax.bitwise_xor, "not": lax.bitwise_not,
+    "is_finite": lax.is_finite,
+    "select_n": _select_n,
+    "clamp": lax.clamp,
+    "nextafter": lax.nextafter,
+    "atan2": lax.atan2,
+    "rem": lax.rem,
+}
+
+_REDUCES = {
+    "reduce_sum": lambda x: jnp.sum(x, axis=-1, keepdims=True),
+    "reduce_max": lambda x: jnp.max(x, axis=-1, keepdims=True),
+    "reduce_min": lambda x: jnp.min(x, axis=-1, keepdims=True),
+    "reduce_prod": lambda x: jnp.prod(x, axis=-1, keepdims=True),
+    "reduce_and": lambda x: jnp.all(x, axis=-1, keepdims=True),
+    "reduce_or": lambda x: jnp.any(x, axis=-1, keepdims=True),
+}
+
+EMITTABLE_PRIMS = (set(_OPS) | set(_REDUCES)
+                   | {"broadcast_in_dim", "reshape", "squeeze", "expand_dims",
+                      "convert_element_type", "integer_pow", "copy",
+                      "stop_gradient", "const"})
+
+
+def pattern_emittable(graph: Graph, pattern: frozenset[int]) -> bool:
+    """Can the Pallas emitter stitch this pattern?"""
+    if analyze(graph, pattern) is None:
+        return False
+    return all(graph.node(n).prim in EMITTABLE_PRIMS for n in pattern)
+
+
+# --------------------------------------------------------------------------
+# emission
+# --------------------------------------------------------------------------
+def _canon2d(role: Role, C: int) -> tuple[int, ...]:
+    """Canonical per-block trailing shape for a role (rows prepended later)."""
+    return {"full": (C,), "row": (1,), "col": (C,), "scalar": ()}[role.value]
+
+
+def _to_block(val, role: Role, br: int, C: int):
+    """Reshape a block-level value to its canonical broadcastable 2D form."""
+    if role is Role.FULL:
+        return val.reshape(br, C)
+    if role is Role.ROW:
+        return val.reshape(br, 1)
+    if role is Role.COL:
+        return val.reshape(1, C)
+    return val.reshape(())
+
+
+@dataclass
+class Emitted:
+    """A compiled pattern: callable + the metadata benchmarks read."""
+    fn: Callable                 # (*ext_arrays) -> tuple(outputs)
+    kind: str                    # "pallas" | "packed"
+    estimate: KernelEstimate
+    ext_ids: list[int]           # runtime external inputs (non-const)
+    out_ids: list[int]
+    scratch_bytes: int
+    scratch_naive_bytes: int
+
+
+def emit_pattern(graph: Graph, pattern: frozenset[int], *,
+                 hw: Hardware = V5E, interpret: bool = True,
+                 force_packed: bool = False) -> Emitted:
+    est = best_estimate(graph, pattern, hw)
+    ext_all = graph.pattern_inputs(pattern)
+    ext_ids = [i for i in ext_all if graph.node(i).kind is not OpKind.CONST]
+    out_ids = graph.pattern_outputs(pattern)
+
+    if not force_packed and pattern_emittable(graph, pattern):
+        info = analyze(graph, pattern)
+        scratch = plan_scratch(graph, pattern, info)
+        if est.schedule == "onepass":
+            fn = _emit_pallas(graph, pattern, info, est.block_rows, ext_ids,
+                              out_ids, interpret=interpret)
+            return Emitted(fn, "pallas", est, ext_ids, out_ids,
+                           scratch.total_bytes, scratch.naive_bytes)
+        if est.schedule == "streaming":
+            fn = _emit_pallas_streaming(graph, pattern, info,
+                                        est.block_rows, ext_ids, out_ids,
+                                        interpret=interpret)
+            return Emitted(fn, "pallas", est, ext_ids, out_ids,
+                           scratch.total_bytes, scratch.naive_bytes)
+
+    fn = _emit_packed(graph, pattern, ext_ids, out_ids)
+    if est.schedule in ("onepass", "streaming"):  # emitter gap: packed
+        from .cost_model import estimate_packed
+        est = estimate_packed(graph, pattern, hw)
+    return Emitted(fn, "packed", est, ext_ids, out_ids, 0, 0)
+
+
+_REDUCE_IDENTITY = {
+    "reduce_sum": 0.0, "reduce_max": -1e30, "reduce_min": 1e30,
+    "reduce_prod": 1.0, "reduce_and": True, "reduce_or": False,
+}
+_REDUCE_COMBINE = {
+    "reduce_sum": lax.add, "reduce_max": lax.max, "reduce_min": lax.min,
+    "reduce_prod": lax.mul,
+    "reduce_and": lax.bitwise_and, "reduce_or": lax.bitwise_or,
+}
+
+
+def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
+                           info: RowInfo, block_rows: int,
+                           ext_ids: list[int], out_ids: list[int], *,
+                           interpret: bool, block_cols: int = 2048) -> Callable:
+    """Streaming multi-phase kernel (warp-composition analogue, §4.1).
+
+    Grid (row_blocks, phases, col_tiles); the two trailing axes iterate
+    sequentially, carrying one VMEM scratch accumulator per reduction
+    (the staged intermediate consumers reuse).  In phase p, nodes with
+    reduce-level <= p are (re)computed per column tile -- the explicit
+    recompute-vs-reuse trade the delta-evaluator prices; level-(p)
+    reductions accumulate masked partials; the final phase writes
+    outputs.  Handles arbitrarily long rows in O(block) VMEM.
+    """
+    from .cost_model import reduce_levels
+
+    R, C = info.R, info.C
+    br = max(1, min(block_rows, R))
+    bc = min(block_cols, C)
+    Rp = math.ceil(R / br) * br
+    NC = math.ceil(C / bc)
+    Cp = NC * bc
+    roles = info.roles
+    members = sorted(pattern)
+    lvl = reduce_levels(graph, pattern)
+    reduces = [n for n in members if graph.node(n).kind is OpKind.REDUCE]
+    phases = max(lvl.values(), default=0) + 1
+    acc_slot = {r: i for i, r in enumerate(reduces)}
+    ext_roles = [roles[i] for i in ext_ids]
+    out_roles = [roles[o] for o in out_ids]
+
+    def kernel(*refs):
+        in_refs = refs[: len(ext_ids)]
+        out_refs = refs[len(ext_ids): len(ext_ids) + len(out_ids)]
+        accs = refs[len(ext_ids) + len(out_ids):]
+        p = pl.program_id(1)
+        j = pl.program_id(2)
+
+        @pl.when((p == 0) & (j == 0))
+        def _init():
+            for r in reduces:
+                accs[acc_slot[r]][...] = jnp.full(
+                    (br, 1), _REDUCE_IDENTITY[graph.node(r).prim],
+                    jnp.float32)
+
+        col = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+        col_ok = col < C  # mask the padded tail tile
+
+        env: dict[int, Any] = {}
+        for nid, role, ref in zip(ext_ids, ext_roles, in_refs):
+            v = ref[...]
+            env[nid] = (v.reshape(br, bc) if role is Role.FULL else
+                        v.reshape(br, 1) if role is Role.ROW else
+                        v.reshape(1, bc) if role is Role.COL else
+                        v.reshape(()))
+
+        def val(i):
+            if i in env:
+                return env[i]
+            cnode = graph.node(i)
+            v = jnp.asarray(cnode.value)
+            if cnode.spec.size > 1:
+                role = roles[i]
+                return (v.reshape(1, bc) if role is Role.COL else
+                        v.reshape(br, 1) if role is Role.ROW else v)
+            return v
+
+        for nid in members:
+            node = graph.node(nid)
+            if node.kind is OpKind.REDUCE:
+                # consumers read the finished accumulator (staged reuse)
+                env[nid] = accs[acc_slot[nid]][...]
+                # accumulate masked partials during this node's phase
+                operand = val(node.inputs[0])
+                ident = _REDUCE_IDENTITY[node.prim]
+                masked = jnp.where(col_ok, operand.astype(jnp.float32),
+                                   ident)
+                part = _REDUCES[node.prim](masked)
+
+                @pl.when(p == lvl[nid] - 1)
+                def _acc(part=part, slot=acc_slot[nid], prim=node.prim):
+                    accs[slot][...] = _REDUCE_COMBINE[prim](
+                        accs[slot][...], part.astype(jnp.float32))
+                continue
+            prim = node.prim
+            if prim == "broadcast_in_dim":
+                role = roles[nid]
+                env[nid] = jnp.broadcast_to(
+                    val(node.inputs[0]),
+                    (br, bc) if role is Role.FULL else
+                    (br, 1) if role is Role.ROW else
+                    (1, bc) if role is Role.COL else ())
+            elif prim in ("reshape", "squeeze", "expand_dims", "copy",
+                          "stop_gradient"):
+                env[nid] = val(node.inputs[0])
+            elif prim == "convert_element_type":
+                env[nid] = val(node.inputs[0]).astype(node.spec.dtype)
+            elif prim == "integer_pow":
+                env[nid] = val(node.inputs[0]) ** node.params.get("y", 2)
+            elif node.kind is OpKind.CONST:
+                env[nid] = val(nid) if node.spec.size > 1 \
+                    else jnp.asarray(node.value)
+            else:
+                env[nid] = _OPS[prim](*(val(i) for i in node.inputs))
+
+        @pl.when(p == phases - 1)
+        def _write():
+            for ref, oid, role in zip(out_refs, out_ids, out_roles):
+                width = bc if role in (Role.FULL, Role.COL) else 1
+                ref[...] = jnp.broadcast_to(env[oid], (br, width)).astype(
+                    ref.dtype)
+
+    in_specs = []
+    for role in ext_roles:
+        if role is Role.FULL:
+            in_specs.append(pl.BlockSpec((br, bc), lambda i, p, j: (i, j)))
+        elif role is Role.ROW:
+            in_specs.append(pl.BlockSpec((br, 1), lambda i, p, j: (i, 0)))
+        elif role is Role.COL:
+            in_specs.append(pl.BlockSpec((1, bc), lambda i, p, j: (0, j)))
+        else:
+            in_specs.append(pl.BlockSpec((1, 1), lambda i, p, j: (0, 0)))
+
+    out_specs, out_shapes = [], []
+    for oid, role in zip(out_ids, out_roles):
+        node = graph.node(oid)
+        if role is Role.FULL:
+            out_specs.append(pl.BlockSpec((br, bc), lambda i, p, j: (i, j)))
+            out_shapes.append(jax.ShapeDtypeStruct((Rp, Cp), node.spec.dtype))
+        else:
+            out_specs.append(pl.BlockSpec((br, 1), lambda i, p, j: (i, 0)))
+            out_shapes.append(jax.ShapeDtypeStruct((Rp, 1), node.spec.dtype))
+
+    from jax.experimental.pallas import tpu as pltpu
+    call = pl.pallas_call(
+        kernel,
+        grid=(Rp // br, phases, NC),
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+        scratch_shapes=[pltpu.VMEM((br, 1), jnp.float32) for _ in reduces],
+        interpret=interpret,
+    )
+
+    out_orig = {o: graph.node(o).spec.shape for o in out_ids}
+
+    def wrapper(*ext_vals):
+        ops_in = []
+        for nid, role, v in zip(ext_ids, ext_roles, ext_vals):
+            if role is Role.FULL:
+                v2 = v.reshape(R, C)
+                v2 = jnp.pad(v2, ((0, Rp - R), (0, Cp - C)))
+            elif role is Role.ROW:
+                v2 = jnp.pad(v.reshape(R, 1), ((0, Rp - R), (0, 0)))
+            elif role is Role.COL:
+                v2 = jnp.pad(v.reshape(1, C), ((0, 0), (0, Cp - C)))
+            else:
+                v2 = jnp.asarray(v).reshape(1, 1)
+            ops_in.append(v2)
+        res = call(*ops_in)
+        if not isinstance(res, (tuple, list)):
+            res = (res,)
+        outs = []
+        for o, r in zip(out_ids, res):
+            r = r[:R]
+            if roles[o] is Role.FULL:
+                r = r[:, :C]
+            outs.append(r.reshape(out_orig[o]))
+        return tuple(outs)
+
+    return wrapper
+
+
+def _emit_packed(graph: Graph, pattern: frozenset[int],
+                 ext_ids: list[int], out_ids: list[int]) -> Callable:
+    """Kernel packing: run the whole subgraph as one fused XLA computation."""
+    members = sorted(pattern)
+
+    def packed_fn(*ext_vals):
+        env: dict[int, Any] = dict(zip(ext_ids, ext_vals))
+        for nid in members:
+            node = graph.node(nid)
+            if node.kind is OpKind.CONST:
+                env[nid] = node.value
+                continue
+            ins = []
+            for i in node.inputs:
+                if i in env:
+                    ins.append(env[i])
+                else:  # external const
+                    ins.append(graph.node(i).value)
+            env[nid] = bind_node(node, ins)
+        return tuple(env[o] for o in out_ids)
+
+    return packed_fn
+
+
+def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
+                 block_rows: int, ext_ids: list[int], out_ids: list[int],
+                 *, interpret: bool) -> Callable:
+    R, C = info.R, info.C
+    br = max(1, min(block_rows, R))
+    Rp = math.ceil(R / br) * br
+    members = sorted(pattern)
+    roles = info.roles
+
+    # decide stage-vs-recompute for expensive multi-consumer sub-roots:
+    # block composition stages (default); the paper's thread-composition
+    # alternative (recompute) wins only when VMEM is tight, which the
+    # latency sweep already folds into block_rows choice.  We stage.
+
+    ext_roles = [roles[i] for i in ext_ids]
+    out_roles = [roles[o] for o in out_ids]
+    out_specs_shapes = []
+    for o, role in zip(out_ids, out_roles):
+        node = graph.node(o)
+        width = C if role in (Role.FULL, Role.COL) else 1
+        out_specs_shapes.append((width, node.spec.dtype))
+
+    def kernel(*refs):
+        in_refs = refs[: len(ext_ids)]
+        out_refs = refs[len(ext_ids):]
+        env: dict[int, Any] = {}
+        for nid, role, ref in zip(ext_ids, ext_roles, in_refs):
+            env[nid] = _to_block(ref[...], role, br, C)
+
+        for nid in members:
+            node = graph.node(nid)
+            role = roles[nid]
+            if node.kind is OpKind.CONST:
+                env[nid] = _to_block(
+                    jnp.asarray(node.value), role, br, C
+                ) if node.spec.size > 1 else jnp.asarray(node.value)
+                continue
+
+            def val(i):
+                if i in env:
+                    return env[i]
+                cnode = graph.node(i)  # embedded external const
+                v = jnp.asarray(cnode.value)
+                return (_to_block(v, roles[i], br, C)
+                        if cnode.spec.size > 1 else v)
+
+            prim = node.prim
+            if prim in _REDUCES:
+                env[nid] = _REDUCES[prim](val(node.inputs[0]))
+            elif prim == "broadcast_in_dim":
+                env[nid] = _to_block(jnp.broadcast_to(
+                    val(node.inputs[0]),
+                    (br, C) if role is Role.FULL else
+                    (br, 1) if role is Role.ROW else
+                    (1, C) if role is Role.COL else ()), role, br, C)
+            elif prim in ("reshape", "squeeze", "expand_dims", "copy",
+                          "stop_gradient"):
+                env[nid] = val(node.inputs[0])
+            elif prim == "convert_element_type":
+                env[nid] = val(node.inputs[0]).astype(node.spec.dtype)
+            elif prim == "integer_pow":
+                env[nid] = val(node.inputs[0]) ** node.params.get("y", 2)
+            else:
+                env[nid] = _OPS[prim](*(val(i) for i in node.inputs))
+
+        for ref, oid in zip(out_refs, out_ids):
+            role = roles[oid]
+            v = env[oid]
+            width = C if role in (Role.FULL, Role.COL) else 1
+            ref[...] = jnp.broadcast_to(v, (br, width)).astype(ref.dtype)
+
+    in_specs = []
+    for role in ext_roles:
+        if role in (Role.FULL,):
+            in_specs.append(pl.BlockSpec((br, C), lambda i: (i, 0)))
+        elif role is Role.ROW:
+            in_specs.append(pl.BlockSpec((br, 1), lambda i: (i, 0)))
+        elif role is Role.COL:
+            in_specs.append(pl.BlockSpec((1, C), lambda i: (0, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
+
+    out_specs = []
+    out_shapes = []
+    for (width, dtype), role in zip(out_specs_shapes, out_roles):
+        out_specs.append(pl.BlockSpec((br, width), lambda i: (i, 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((Rp, width), dtype))
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(Rp // br,),
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+        interpret=interpret,
+    )
+
+    ext_shapes = {i: graph.node(i).spec.shape for i in ext_ids}
+    out_orig_shapes = {o: graph.node(o).spec.shape for o in out_ids}
+
+    def wrapper(*ext_vals):
+        ops = []
+        for nid, role, v in zip(ext_ids, ext_roles, ext_vals):
+            if role is Role.FULL:
+                v2 = v.reshape(R, C)
+                if Rp != R:
+                    v2 = jnp.pad(v2, ((0, Rp - R), (0, 0)))
+            elif role is Role.ROW:
+                v2 = v.reshape(R, 1)
+                if Rp != R:
+                    v2 = jnp.pad(v2, ((0, Rp - R), (0, 0)))
+            elif role is Role.COL:
+                v2 = v.reshape(1, C)
+            else:
+                v2 = jnp.asarray(v).reshape(1, 1)
+            ops.append(v2)
+        res = call(*ops)
+        if not isinstance(res, (tuple, list)):
+            res = (res,)
+        outs = []
+        for o, r in zip(out_ids, res):
+            r = r[:R]
+            outs.append(r.reshape(out_orig_shapes[o]))
+        return tuple(outs)
+
+    return wrapper

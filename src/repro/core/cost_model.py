@@ -1,0 +1,304 @@
+"""Two-level cost model (paper §4.3 latency-evaluator, §5.4 delta-evaluator).
+
+TPU re-derivation of the paper's GPU model:
+
+  latency-evaluator (accurate, used by codegen):
+      paper:  L = N_wave * L_warp,  N_wave = N_warp / Occupancy,
+              L_warp = N_instr * CPI
+      here:   L = N_step * t_step + t_launch
+              t_step = max(t_hbm, t_vpu)   if double-buffering fits VMEM
+                     = t_hbm + t_vpu       otherwise  (occupancy analogue)
+      A TensorCore runs one kernel at a time, so GPU occupancy has no
+      analogue; what limits overlap is whether 2x the per-step working set
+      fits the VMEM budget (input buffer pair + scratch).
+
+  delta-evaluator (fast, used by the explorer):
+      paper:  f = T_reduced_mem + T_reduced_calls - T_penalty
+      here:   identical structure; T_reduced_mem from HBM bytes that stop
+              round-tripping, T_reduced_calls from launch overhead,
+              T_penalty from a simplified latency model (fixed live-set,
+              max-scratch instead of lifetime analysis -- mirroring the
+              paper's simplifications of fixed register count and max
+              shared memory).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .classify import vpu_cost
+from .ir import Graph, OpKind
+from .memory_planner import plan_scratch
+from .rowspec import Role, RowInfo, analyze, role_bytes_per_row
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """TPU v5e-class chip (the target in this repo's roofline)."""
+
+    peak_bf16_flops: float = 197e12      # MXU, bf16
+    hbm_bw: float = 819e9                # bytes/s
+    ici_bw: float = 50e9                 # bytes/s per link
+    vpu_ops: float = 4.0e12              # vector-ALU element-ops/s
+    vmem_bytes: int = 16 * 1024 * 1024   # per-core VMEM working budget
+    launch_s: float = 4e-6               # per-executable dispatch overhead
+    hbm_latency_s: float = 1.2e-6        # fixed cost per kernel's HBM round
+
+    @property
+    def vmem_budget(self) -> int:
+        # half for the in/out double-buffer pair, half for scratch
+        return self.vmem_bytes // 2
+
+
+V5E = Hardware()
+
+#: Block-row candidates the codegen enumerates (launch-dimension analogue).
+BLOCK_ROWS = (1, 8, 16, 32, 64, 128, 256)
+
+
+def _pad(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# latency-evaluator
+# ---------------------------------------------------------------------------
+@dataclass
+class KernelEstimate:
+    schedule: str           # "onepass" | "packed" | "unfused"
+    block_rows: int
+    latency_s: float
+    hbm_bytes: int
+    vpu_ops: float
+    scratch_bytes: int      # per grid step
+    n_steps: int
+    feasible: bool
+
+
+def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
+                     block_rows: int, hw: Hardware = V5E) -> KernelEstimate:
+    """Latency of the stitched one-pass row kernel at a given block size."""
+    R, C = info.R, info.C
+    Cp = _pad(C, 128)
+    br = min(block_rows, R)
+    n_steps = math.ceil(R / br)
+
+    ext_in = graph.pattern_inputs(pattern)
+    outs = graph.pattern_outputs(pattern)
+
+    def tile_bytes(nid: int) -> int:
+        node = graph.node(nid)
+        role = info.roles.get(nid)
+        if role is Role.FULL:
+            return br * Cp * node.spec.itemsize
+        if role is Role.ROW:
+            return br * node.spec.itemsize
+        if role is Role.COL:
+            return Cp * node.spec.itemsize  # loaded once, charged per step
+        return node.spec.itemsize
+
+    bytes_in = sum(tile_bytes(i) for i in ext_in
+                   if graph.node(i).kind is not OpKind.CONST
+                   or graph.node(i).spec.size > 128)
+    bytes_out = sum(tile_bytes(o) for o in outs)
+    step_hbm = bytes_in + bytes_out
+
+    ops = 0.0
+    for nid in pattern:
+        node = graph.node(nid)
+        role = info.roles[nid]
+        per_step = (br * Cp if role is Role.FULL else
+                    br if role is Role.ROW else Cp if role is Role.COL else 1)
+        if node.kind is OpKind.REDUCE:
+            per_step = br * Cp  # reduce reads a FULL operand tile
+        ops += vpu_cost(node.prim) * per_step
+
+    scratch = plan_scratch(graph, pattern, info)
+    scratch_bytes = scratch.total_bytes * br + sum(
+        role_bytes_per_row(Role.FULL, Cp, 4) // Cp * 0  # COL params live whole-kernel
+        for _ in ())
+    col_bytes = sum(Cp * graph.node(i).spec.itemsize for i in ext_in
+                    if info.roles.get(i) is Role.COL)
+    working = step_hbm + scratch_bytes + col_bytes
+
+    t_hbm = step_hbm / hw.hbm_bw
+    t_vpu = ops / hw.vpu_ops
+    fits = 2 * working <= hw.vmem_budget * 2  # buffer pair within full VMEM
+    overlap = 2 * working <= hw.vmem_bytes
+    t_step = max(t_hbm, t_vpu) if overlap else (t_hbm + t_vpu)
+
+    total_hbm = (graph.pattern_hbm_bytes(pattern))
+    lat = n_steps * t_step + hw.launch_s + hw.hbm_latency_s
+    return KernelEstimate("onepass", br, lat, total_hbm, ops * n_steps,
+                          int(working), n_steps, fits)
+
+
+def reduce_levels(graph: Graph, pattern: frozenset[int]) -> dict[int, int]:
+    """Phase level per node for the streaming schedule.
+
+    A reduce result becomes available only after a full pass over the
+    row, so ``lvl(reduce) = lvl(input) + 1``; everything else inherits
+    the max of its inputs.  Phases needed = max level + 1 (LayerNorm:
+    mean pass, variance pass, apply pass = 3).
+    """
+    lvl: dict[int, int] = {}
+    for nid in sorted(pattern):
+        node = graph.node(nid)
+        base = max((lvl.get(i, 0) for i in node.inputs), default=0)
+        lvl[nid] = base + 1 if node.kind is OpKind.REDUCE else base
+    return lvl
+
+
+def estimate_streaming(graph: Graph, pattern: frozenset[int], info: RowInfo,
+                       block_rows: int, block_cols: int,
+                       hw: Hardware = V5E) -> KernelEstimate:
+    """Streaming multi-phase schedule (warp-composition analogue):
+    column-tiled passes with ROW accumulators staged in VMEM scratch;
+    FULL inputs are re-read (and low-level nodes re-computed) once per
+    phase -- the reuse/recompute trade of paper §2.3, priced here."""
+    R, C = info.R, info.C
+    br = max(1, min(block_rows, R))
+    bc = max(128, min(block_cols, _pad(C, 128)))
+    phases = max(reduce_levels(graph, pattern).values(), default=0) + 1
+    n_col_tiles = math.ceil(C / bc)
+    n_steps = math.ceil(R / br) * phases * n_col_tiles
+
+    ext_in = graph.pattern_inputs(pattern)
+    outs = graph.pattern_outputs(pattern)
+    full_in = sum(br * bc * graph.node(i).spec.itemsize for i in ext_in
+                  if info.roles.get(i) is Role.FULL)
+    other_in = sum(graph.node(i).spec.itemsize * br for i in ext_in
+                   if info.roles.get(i) is Role.ROW)
+    out_b = sum(br * (bc if info.roles[o] is Role.FULL else 1)
+                * graph.node(o).spec.itemsize for o in outs)
+    # inputs stream every phase; outputs only in the last phase
+    step_hbm = full_in + other_in + out_b / phases
+
+    ops = 0.0
+    for nid in pattern:
+        node = graph.node(nid)
+        per_tile = br * bc if info.roles[nid] is Role.FULL else br
+        if node.kind is OpKind.REDUCE:
+            per_tile = br * bc
+        ops += vpu_cost(node.prim) * per_tile  # recomputed each phase
+
+    n_reduces = sum(1 for n in pattern
+                    if graph.node(n).kind is OpKind.REDUCE)
+    working = 2 * (full_in + out_b) + n_reduces * br * 4
+    overlap = 2 * working <= hw.vmem_bytes
+    t_step = max(step_hbm / hw.hbm_bw, ops / hw.vpu_ops) if overlap \
+        else (step_hbm / hw.hbm_bw + ops / hw.vpu_ops)
+    lat = n_steps * t_step + hw.launch_s + hw.hbm_latency_s
+    feasible = working <= hw.vmem_budget
+    return KernelEstimate("streaming", br, lat,
+                          graph.pattern_hbm_bytes(pattern) * phases,
+                          ops * n_steps, int(working), n_steps, feasible)
+
+
+def estimate_packed(graph: Graph, pattern: frozenset[int],
+                    hw: Hardware = V5E) -> KernelEstimate:
+    """Kernel-packing fallback: one launch, XLA-style loop fusion inside.
+
+    Intermediates consumed by *foreign-parallelism* members still spill,
+    but the launch count collapses to 1 and same-loop intermediates fuse.
+    We charge full HBM for external IO plus half of the internal bytes
+    (the paper's thread-composition keeps same-index chains in registers).
+    """
+    hbm = graph.pattern_hbm_bytes(pattern) + graph.internal_bytes(pattern) // 2
+    ops = float(graph.subgraph_flops(pattern))
+    t = max(hbm / hw.hbm_bw, ops / hw.vpu_ops) + hw.launch_s + hw.hbm_latency_s
+    return KernelEstimate("packed", 0, t, hbm, ops, 0, 1, True)
+
+
+def estimate_unfused(graph: Graph, pattern: frozenset[int],
+                     hw: Hardware = V5E) -> KernelEstimate:
+    """Every member its own kernel (the no-fusion baseline)."""
+    hbm = graph.unfused_hbm_bytes(pattern)
+    ops = float(graph.subgraph_flops(pattern))
+    n_kernels = sum(1 for nid in pattern
+                    if graph.node(nid).kind in (OpKind.LIGHT_EW, OpKind.EXPENSIVE_EW,
+                                                OpKind.REDUCE, OpKind.TRANSPOSE))
+    n_kernels = max(n_kernels, 1)
+    t = hbm / hw.hbm_bw + ops / hw.vpu_ops \
+        + n_kernels * (hw.launch_s + hw.hbm_latency_s)
+    return KernelEstimate("unfused", 0, t, hbm, ops, 0, n_kernels, True)
+
+
+def best_estimate(graph: Graph, pattern: frozenset[int],
+                  hw: Hardware = V5E) -> KernelEstimate:
+    """Enumerate schedules x launch dims, return the latency-optimal one."""
+    cands = [estimate_packed(graph, pattern, hw)]
+    info = analyze(graph, pattern)
+    if info is not None:
+        for br in BLOCK_ROWS:
+            est = estimate_onepass(graph, pattern, info, br, hw)
+            if est.feasible:
+                cands.append(est)
+            if br >= info.R:
+                break
+        # streaming (warp-composition analogue) for long rows
+        for br, bc in ((8, 512), (8, 2048), (64, 2048)):
+            est = estimate_streaming(graph, pattern, info, br, bc, hw)
+            if est.feasible:
+                cands.append(est)
+    return min(cands, key=lambda e: e.latency_s)
+
+
+# ---------------------------------------------------------------------------
+# delta-evaluator
+# ---------------------------------------------------------------------------
+def delta_evaluator(graph: Graph, pattern: frozenset[int],
+                    hw: Hardware = V5E) -> float:
+    """Score f(P) = T_reduced_mem + T_reduced_calls - T_penalty  (§5.4)."""
+    if len(pattern) == 1:
+        return 0.0
+
+    # T_reduced_mem: internal tensors stop round-tripping HBM (1 write +
+    # one read per consumer), and shared external inputs are read once.
+    saved_bytes = 0
+    outset = set(graph.outputs)
+    for nid in pattern:
+        node = graph.node(nid)
+        cons = graph.consumers(nid)
+        if nid not in outset and cons and all(c in pattern for c in cons):
+            saved_bytes += node.nbytes * (1 + len(cons))
+    for ext in graph.pattern_inputs(pattern):
+        n_in = sum(1 for c in graph.consumers(ext) if c in pattern)
+        if n_in > 1:
+            saved_bytes += graph.node(ext).nbytes * (n_in - 1)
+    t_mem = saved_bytes / hw.hbm_bw
+
+    # T_reduced_calls
+    n_kernels = sum(1 for nid in pattern
+                    if graph.node(nid).kind in (OpKind.LIGHT_EW, OpKind.EXPENSIVE_EW,
+                                                OpKind.REDUCE, OpKind.TRANSPOSE))
+    t_calls = max(0, n_kernels - 1) * (hw.launch_s + hw.hbm_latency_s)
+
+    # T_penalty: simplified latency model (paper: fixed regs=16, max shmem,
+    # no lifetime analysis).  Here: max per-row scratch w/o sharing, fixed
+    # 16-value live set; VMEM overflow and no-row-view both penalize.
+    t_penalty = 0.0
+    info = analyze(graph, pattern)
+    if info is None:
+        # not stitchable -> only packing benefits remain; forfeit most of
+        # the reuse saving but keep call reduction.
+        t_penalty = 0.7 * t_mem
+    else:
+        Cp = _pad(info.C, 128)
+        naive_scratch = 0
+        for nid in pattern:
+            node = graph.node(nid)
+            naive_scratch += role_bytes_per_row(info.roles[nid], Cp,
+                                                node.spec.itemsize)
+        # fixed live-set of 16 rows (paper's fixed register count analogue)
+        est_working = 16 * max(naive_scratch, Cp * 4)
+        if est_working > hw.vmem_budget:
+            t_penalty += t_mem * min(1.0, est_working / (4 * hw.vmem_budget))
+        # expensive ops staged mid-pattern add VPU pressure per consumer
+        for nid in info.expensive_nodes:
+            cons_in = sum(1 for c in graph.consumers(nid) if c in pattern)
+            if cons_in > 1:
+                node = graph.node(nid)
+                t_penalty += 0.1 * vpu_cost(node.prim) * node.spec.size / hw.vpu_ops
+
+    return t_mem + t_calls - t_penalty

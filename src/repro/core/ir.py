@@ -1,0 +1,285 @@
+"""Tensor-operation graph IR for the FusionStitching planner.
+
+The IR is a flat SSA graph of tensor ops.  It is produced by tracing an
+arbitrary JAX function (``repro.core.tracer``), consumed by the fusion
+explorer / planner (paper §5) and by the stitched-kernel code generator
+(paper §4).
+
+Op-kind taxonomy follows the paper's classification (§4): *light
+element-wise*, *expensive element-wise* and *reduction* ops are the fusible
+memory-intensive kinds; GEMM/conv and data-dependent indexing ops are
+``OPAQUE`` fusion boundaries (the paper's "compute intensive" ops).
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+
+class OpKind(enum.Enum):
+    INPUT = "input"              # graph input (not a member of any pattern)
+    CONST = "const"              # literal / captured constant
+    LIGHT_EW = "light_ew"        # add/sub/mul/cmp/select/... (paper: light elem-wise)
+    EXPENSIVE_EW = "expensive_ew"  # exp/log/tanh/rsqrt/... (paper: expensive elem-wise)
+    REDUCE = "reduce"            # reduce_{sum,max,min,prod} over axes
+    BROADCAST = "broadcast"      # broadcast_in_dim
+    RESHAPE = "reshape"          # shape-only: reshape / squeeze / expand_dims
+    TRANSPOSE = "transpose"      # layout permutation (memory-intensive per paper §1)
+    OPAQUE = "opaque"            # GEMM / conv / gather / scan / ... : fusion boundary
+
+
+#: Kinds that may be members of a fusion pattern.
+FUSIBLE_KINDS = frozenset(
+    {
+        OpKind.LIGHT_EW,
+        OpKind.EXPENSIVE_EW,
+        OpKind.REDUCE,
+        OpKind.BROADCAST,
+        OpKind.RESHAPE,
+        OpKind.TRANSPOSE,
+    }
+)
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    shape: tuple[int, ...]
+    dtype: str  # canonical numpy dtype name, e.g. "float32", "bfloat16"
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def itemsize(self) -> int:
+        if self.dtype == "bfloat16":
+            return 2
+        return np.dtype(self.dtype).itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * self.itemsize
+
+    def __repr__(self) -> str:  # compact: f32[8,128]
+        short = {
+            "float32": "f32",
+            "bfloat16": "bf16",
+            "float16": "f16",
+            "int32": "i32",
+            "int64": "i64",
+            "bool": "pred",
+            "float64": "f64",
+        }.get(self.dtype, self.dtype)
+        return f"{short}[{','.join(map(str, self.shape))}]"
+
+
+@dataclass
+class Node:
+    """One SSA tensor op.
+
+    ``params`` carries primitive-specific attributes (reduce axes, broadcast
+    dimension mapping, transpose permutation, ...).  ``value`` is set only for
+    ``CONST`` nodes.
+    """
+
+    nid: int
+    prim: str
+    kind: OpKind
+    inputs: tuple[int, ...]
+    spec: TensorSpec
+    params: dict[str, Any] = field(default_factory=dict)
+    value: Any = None  # CONST payload
+    label: str = ""    # debug name (jaxpr var)
+
+    @property
+    def nbytes(self) -> int:
+        return self.spec.nbytes
+
+    def __repr__(self) -> str:
+        ins = ",".join(f"%{i}" for i in self.inputs)
+        return f"%{self.nid} = {self.prim}({ins}) : {self.spec} [{self.kind.value}]"
+
+
+class Graph:
+    """A small dataflow graph with the queries the planner needs.
+
+    Nodes are stored in topological order (construction order from the
+    tracer guarantees this).
+    """
+
+    def __init__(self) -> None:
+        self.nodes: dict[int, Node] = {}
+        self.inputs: list[int] = []
+        self.outputs: list[int] = []
+        self._consumers: dict[int, list[int]] | None = None
+
+    # -- construction ------------------------------------------------------
+    def add(self, node: Node) -> int:
+        self.nodes[node.nid] = node
+        self._consumers = None
+        return node.nid
+
+    # -- queries -----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def node(self, nid: int) -> Node:
+        return self.nodes[nid]
+
+    def consumers(self, nid: int) -> list[int]:
+        if self._consumers is None:
+            cons: dict[int, list[int]] = {n: [] for n in self.nodes}
+            for n in self.nodes.values():
+                for i in n.inputs:
+                    cons[i].append(n.nid)
+            self._consumers = cons
+        return self._consumers[nid]
+
+    def topo_order(self) -> list[int]:
+        """Topological order (producers first).  Construction order is topo."""
+        return sorted(self.nodes)
+
+    def num_edges(self) -> int:
+        return sum(len(n.inputs) for n in self.nodes.values())
+
+    def fusible_nodes(self) -> list[int]:
+        return [n.nid for n in self.nodes.values() if n.kind in FUSIBLE_KINDS]
+
+    # -- pattern validity ---------------------------------------------------
+    def is_convex(self, pattern: frozenset[int]) -> bool:
+        """True iff fusing ``pattern`` introduces no cyclic dependence.
+
+        Paper §5.2 / Fig. 6: a pattern is invalid if a path exits the pattern
+        and re-enters it.  Equivalent check: no node *outside* the pattern
+        both (transitively) depends on a pattern member and feeds a pattern
+        member.  We run a forward reachability sweep between the min and max
+        node id of the pattern (node ids are topo-ordered).
+        """
+        if len(pattern) <= 1:
+            return True
+        lo, hi = min(pattern), max(pattern)
+        # tainted = reachable from the pattern via at least one outside node
+        tainted: set[int] = set()
+        for nid in range(lo, hi + 1):
+            node = self.nodes.get(nid)
+            if node is None:
+                continue
+            if nid in pattern:
+                # consumes a tainted value => cycle
+                if any(i in tainted for i in node.inputs):
+                    return False
+                continue
+            if any((i in pattern) or (i in tainted) for i in node.inputs):
+                tainted.add(nid)
+        return True
+
+    def pattern_inputs(self, pattern: frozenset[int]) -> list[int]:
+        """External values read by the pattern (deduped, stable order)."""
+        seen: list[int] = []
+        for nid in sorted(pattern):
+            for i in self.nodes[nid].inputs:
+                if i not in pattern and i not in seen:
+                    seen.append(i)
+        return seen
+
+    def pattern_outputs(self, pattern: frozenset[int]) -> list[int]:
+        """Pattern members consumed outside the pattern (or graph outputs)."""
+        outs: list[int] = []
+        outset = set(self.outputs)
+        for nid in sorted(pattern):
+            if nid in outset or any(c not in pattern for c in self.consumers(nid)):
+                outs.append(nid)
+        return outs
+
+    def internal_bytes(self, pattern: frozenset[int]) -> int:
+        """Bytes of intermediates that stop round-tripping HBM when fused.
+
+        A member tensor is *internal* iff every consumer is inside the
+        pattern and it is not a graph output.  These are exactly the values
+        the paper keeps in registers / shared memory (for us: VREG / VMEM).
+        """
+        outset = set(self.outputs)
+        total = 0
+        for nid in pattern:
+            if nid in outset:
+                continue
+            cons = self.consumers(nid)
+            if cons and all(c in pattern for c in cons):
+                total += self.nodes[nid].nbytes
+        return total
+
+    def pattern_hbm_bytes(self, pattern: frozenset[int]) -> int:
+        """HBM traffic of the fused kernel: external reads + external writes."""
+        rd = sum(self.nodes[i].nbytes for i in self.pattern_inputs(pattern)
+                 if self.nodes[i].kind is not OpKind.CONST or self.nodes[i].spec.size > 128)
+        wr = sum(self.nodes[o].nbytes for o in self.pattern_outputs(pattern))
+        return rd + wr
+
+    def unfused_hbm_bytes(self, pattern: frozenset[int]) -> int:
+        """HBM traffic if every member ran as its own kernel."""
+        total = 0
+        for nid in pattern:
+            node = self.nodes[nid]
+            rd = sum(self.nodes[i].nbytes for i in node.inputs
+                     if self.nodes[i].kind is not OpKind.CONST or self.nodes[i].spec.size > 128)
+            total += rd + node.nbytes
+        return total
+
+    def subgraph_flops(self, pattern: Iterable[int]) -> int:
+        """Element-op count (not MXU flops) of the pattern, for the VPU term."""
+        total = 0
+        for nid in pattern:
+            node = self.nodes[nid]
+            if node.kind in (OpKind.LIGHT_EW, OpKind.EXPENSIVE_EW):
+                total += node.spec.size
+            elif node.kind is OpKind.REDUCE:
+                total += self.nodes[node.inputs[0]].spec.size
+        return total
+
+    # -- debug ---------------------------------------------------------------
+    def pprint(self) -> str:
+        lines = [f"graph: {len(self.nodes)} nodes, {self.num_edges()} edges"]
+        for nid in self.topo_order():
+            mark = "->" if nid in self.outputs else "  "
+            lines.append(f" {mark} {self.nodes[nid]!r}")
+        return "\n".join(lines)
+
+
+@dataclass(frozen=True)
+class Pattern:
+    """A candidate fusion pattern: a convex subgraph + its explorer score."""
+
+    members: frozenset[int]
+    score: float  # delta-evaluator f(P), higher is better
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def overlaps(self, covered: set[int] | frozenset[int]) -> bool:
+        return not self.members.isdisjoint(covered)
+
+
+@dataclass
+class FusionPlan:
+    """A set of disjoint patterns covering (a subset of) the graph (§5.1)."""
+
+    patterns: list[Pattern] = field(default_factory=list)
+    total_score: float = 0.0
+
+    def covered(self) -> set[int]:
+        s: set[int] = set()
+        for p in self.patterns:
+            s |= p.members
+        return s
+
+    def validate_disjoint(self) -> bool:
+        seen: set[int] = set()
+        for p in self.patterns:
+            if not p.members.isdisjoint(seen):
+                return False
+            seen |= p.members
+        return True

@@ -1,0 +1,298 @@
+"""Fusion-plan composition: beam search over candidate patterns (paper §5.3)
+plus remote fusion (paper §5, Fig. 5) and final latency-evaluator pick.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .cost_model import Hardware, V5E, best_estimate
+from .explorer import FusionExplorer
+from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, Pattern
+from .rowspec import analyze
+
+BEAM_WIDTH = 3  # paper: 3 buffer sets
+
+
+@dataclass
+class _Beam:
+    patterns: list[Pattern] = field(default_factory=list)
+    covered: frozenset[int] = frozenset()
+    score: float = 0.0
+
+
+def beam_search(graph: Graph, candidates: dict[int, list[Pattern]],
+                width: int = BEAM_WIDTH) -> list[FusionPlan]:
+    """Compose up to ``width`` disjoint-pattern plans (paper §5.3).
+
+    Traverses producer -> consumer; appends each vertex candidate to each
+    buffer set when non-overlapping; keeps the top ``width`` accumulated-f
+    sets per step.
+    """
+    beams = [_Beam()]
+    for vid in graph.topo_order():
+        cands = candidates.get(vid)
+        if not cands:
+            continue
+        grown: list[_Beam] = list(beams)  # skipping vid is always an option
+        for beam in beams:
+            if vid in beam.covered:
+                continue
+            for pat in cands:
+                if len(pat.members) <= 1 or pat.overlaps(beam.covered):
+                    continue
+                grown.append(_Beam(beam.patterns + [pat],
+                                   beam.covered | pat.members,
+                                   beam.score + pat.score))
+        # dedupe by covered-set signature, keep top-width
+        uniq: dict[tuple, _Beam] = {}
+        for b in sorted(grown, key=lambda b: -b.score):
+            key = tuple(sorted(p.members for p in b.patterns))
+            if key not in uniq:
+                uniq[key] = b
+            if len(uniq) >= width * 4:
+                break
+        beams = sorted(uniq.values(), key=lambda b: -b.score)[:width]
+
+    return [FusionPlan(b.patterns, b.score) for b in beams]
+
+
+def _leftover_singletons(graph: Graph, plan: FusionPlan) -> list[int]:
+    covered = plan.covered()
+    return [nid for nid in graph.topo_order()
+            if graph.node(nid).kind in FUSIBLE_KINDS and nid not in covered]
+
+
+def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
+                  max_rounds: int = 4) -> FusionPlan:
+    """Greedy pairwise pattern merging after beam search.
+
+    PatternReduction grows patterns from a producer toward consumers, so a
+    side-input's producer chain (e.g. the scale/bias broadcasts feeding a
+    LayerNorm epilogue) can land in a sibling pattern.  Merging two plan
+    patterns is legal when their union is convex; we accept a merge when
+    the delta-evaluator scores the union at least as well as the parts
+    (the union also saves a launch, folded into the score).  Leftover
+    singletons adjacent to a pattern are absorbed the same way.
+    """
+    from .cost_model import delta_evaluator
+
+    pats = [p.members for p in plan.patterns]
+    for _ in range(max_rounds):
+        changed = False
+        # absorb leftover singleton producers/consumers
+        tmp_plan = FusionPlan([Pattern(m, 0.0) for m in pats], 0.0)
+        for nid in _leftover_singletons(graph, tmp_plan):
+            for i, members in enumerate(pats):
+                touches = (any(c in members for c in graph.consumers(nid))
+                           or any(inp in members
+                                  for inp in graph.node(nid).inputs))
+                if not touches:
+                    continue
+                union = members | {nid}
+                if graph.is_convex(union) and \
+                        delta_evaluator(graph, union, hw) >= \
+                        delta_evaluator(graph, members, hw):
+                    pats[i] = union
+                    changed = True
+                    break
+        # pairwise merges
+        i = 0
+        while i < len(pats):
+            j = i + 1
+            merged = False
+            while j < len(pats):
+                union = pats[i] | pats[j]
+                if graph.is_convex(union):
+                    s_union = delta_evaluator(graph, union, hw)
+                    s_parts = (delta_evaluator(graph, pats[i], hw)
+                               + delta_evaluator(graph, pats[j], hw))
+                    if s_union >= s_parts:
+                        pats[i] = union
+                        pats.pop(j)
+                        changed = merged = True
+                        continue
+                j += 1
+            i += 1
+        if not changed:
+            break
+
+    out = FusionPlan([Pattern(m, delta_evaluator(graph, m, hw))
+                      for m in pats])
+    out.total_score = sum(p.score for p in out.patterns)
+    return out
+
+
+def remote_fusion(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
+                  max_pack: int = 8) -> FusionPlan:
+    """Pack leftover non-adjacent kernels to cut launch count (paper Fig. 5).
+
+    The paper introduces a virtual producer ``h`` over all pattern roots and
+    re-runs PatternReduction; the effect is *kernel packing* of remote
+    patterns.  We realize the same effect directly: leftover singletons that
+    form a convex union are packed greedily into launch groups.
+    """
+    singles = _leftover_singletons(graph, plan)
+    packed: list[Pattern] = []
+    bucket: list[int] = []
+    for nid in singles:
+        trial = frozenset(bucket + [nid])
+        if len(trial) <= max_pack and graph.is_convex(trial):
+            bucket.append(nid)
+        else:
+            if len(bucket) > 1:
+                packed.append(Pattern(frozenset(bucket), 0.0))
+            bucket = [nid]
+    if len(bucket) > 1:
+        packed.append(Pattern(frozenset(bucket), 0.0))
+    if not packed:
+        return plan
+    return FusionPlan(plan.patterns + packed, plan.total_score)
+
+
+def plan_latency(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
+                 composition: str = "auto") -> float:
+    """Accurate plan cost: latency-evaluator over patterns + leftovers.
+
+    ``composition="thread"`` restricts every pattern to the packed
+    (thread-local) schedule — the XLA baseline's capability envelope.
+    """
+    from .cost_model import estimate_packed
+
+    total = 0.0
+    for pat in plan.patterns:
+        if composition == "thread":
+            total += estimate_packed(graph, pat.members, hw).latency_s
+        else:
+            total += best_estimate(graph, pat.members, hw).latency_s
+    for nid in _leftover_singletons(graph, plan):
+        total += best_estimate(graph, frozenset({nid}), hw).latency_s
+    return total
+
+
+def make_plan(graph: Graph, hw: Hardware = V5E,
+              use_remote_fusion: bool = True) -> FusionPlan:
+    """explore -> beam-search -> latency pick -> remote fusion."""
+    explorer = FusionExplorer(graph, hw)
+    candidates = explorer.explore()
+    plans = beam_search(graph, candidates)
+    if not plans:
+        plans = [FusionPlan()]
+    best = min(plans, key=lambda p: plan_latency(graph, p, hw))
+    assert best.validate_disjoint(), "planner produced overlapping patterns"
+    best = coalesce_plan(graph, best, hw)
+    assert best.validate_disjoint()
+    if use_remote_fusion:
+        best = remote_fusion(graph, best, hw)
+        assert best.validate_disjoint()
+    return best
+
+
+# ---------------------------------------------------------------------------
+# XLA-baseline fusion simulator (the paper's comparison target, §2.1)
+# ---------------------------------------------------------------------------
+def xla_baseline_plan(graph: Graph) -> FusionPlan:
+    """Rule-based greedy producer->consumer fusion mimicking XLA.
+
+    XLA's instruction fusion transfers intermediates thread-locally only:
+    light element-wise / broadcast / reshape ops fuse freely, but a
+    reduction or expensive element-wise op may only appear as the *root*
+    of a fusion (never mid-fusion, to avoid per-thread recomputation) --
+    exactly the restriction the paper lifts (§2.1).  Greedy and local,
+    like XLA's pass.
+    """
+    from .ir import Pattern
+
+    owner: dict[int, int] = {}      # node -> fusion index
+    fusions: list[set[int]] = []
+
+    # reverse topo: consumers absorb producers (XLA instruction fusion)
+    for nid in reversed(graph.topo_order()):
+        node = graph.node(nid)
+        if node.kind not in FUSIBLE_KINDS:
+            continue
+        attached = False
+        if node.kind not in (OpKind.REDUCE, OpKind.EXPENSIVE_EW):
+            # cheap ops may sit mid-fusion (thread-local recompute is fine)
+            for c in graph.consumers(nid):
+                cidx = owner.get(c)
+                if cidx is None:
+                    continue
+                trial = frozenset(fusions[cidx] | {nid})
+                if graph.is_convex(trial):
+                    fusions[cidx].add(nid)
+                    owner[nid] = cidx
+                    attached = True
+                    break
+        if not attached:
+            # reduce / expensive ops become fusion ROOTS (paper §2.1: XLA
+            # "only allows expensive ops to appear in the tail of a fusion")
+            fusions.append({nid})
+            owner[nid] = len(fusions) - 1
+
+    pats = [Pattern(frozenset(f), 0.0) for f in fusions]
+    plan = FusionPlan(pats)
+    assert plan.validate_disjoint()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# plan statistics (feeds the Table-2-style benchmarks)
+# ---------------------------------------------------------------------------
+@dataclass
+class PlanStats:
+    n_nodes: int
+    n_fusible: int
+    n_patterns: int
+    n_kernels_stitched: int     # launches under this plan
+    n_kernels_unfused: int      # launches op-by-op (TF analogue)
+    hbm_bytes_stitched: int
+    hbm_bytes_unfused: int
+
+    @property
+    def kernel_reduction(self) -> float:
+        return self.n_kernels_stitched / max(1, self.n_kernels_unfused)
+
+    @property
+    def traffic_reduction(self) -> float:
+        return self.hbm_bytes_stitched / max(1, self.hbm_bytes_unfused)
+
+
+def plan_stats(graph: Graph, plan: FusionPlan,
+               composition: str = "auto") -> PlanStats:
+    """Plan metrics.  ``composition`` sets the reuse accounting:
+      "auto"   -- per-pattern best schedule (block composition when the
+                  row view exists, thread-composition packing otherwise),
+      "thread" -- XLA-style thread-local reuse only (same-index chains
+                  stay in registers; cross-parallelism intermediates
+                  spill half the time): used for the XLA baseline rows.
+    """
+    from .cost_model import best_estimate
+
+    fusible = graph.fusible_nodes()
+    covered = plan.covered()
+    leftovers = [n for n in fusible if n not in covered]
+    opaque = [n for n in graph.nodes if graph.node(n).kind is OpKind.OPAQUE
+              and graph.node(n).prim != "tuple_get"]
+
+    hbm_st = 0
+    for pat in plan.patterns:
+        if composition == "thread":
+            hbm_st += (graph.pattern_hbm_bytes(pat.members)
+                       + graph.internal_bytes(pat.members) // 2)
+        else:
+            hbm_st += best_estimate(graph, pat.members).hbm_bytes
+    for nid in leftovers + opaque:
+        hbm_st += graph.unfused_hbm_bytes(frozenset({nid}))
+
+    hbm_un = sum(graph.unfused_hbm_bytes(frozenset({n}))
+                 for n in fusible + opaque)
+
+    return PlanStats(
+        n_nodes=len(graph),
+        n_fusible=len(fusible),
+        n_patterns=len(plan.patterns),
+        n_kernels_stitched=len(plan.patterns) + len(leftovers) + len(opaque),
+        n_kernels_unfused=len(fusible) + len(opaque),
+        hbm_bytes_stitched=hbm_st,
+        hbm_bytes_unfused=hbm_un,
+    )

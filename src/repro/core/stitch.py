@@ -1,0 +1,225 @@
+"""``stitched_jit`` -- the FusionStitching public API.
+
+Usage::
+
+    fused = stitched_jit(layer_norm)        # trace -> explore -> plan -> emit
+    y = fused(x, gamma, beta)               # runs stitched Pallas kernels
+
+The wrapper is a pure JAX-traceable function, so it composes with jit /
+grad / vmap / pjit: stitched kernels appear as pallas_call ops inside a
+larger program, exactly like the paper's fusions live inside an XLA
+module.  Plans are cached per static shape/dtype signature (the paper's
+tune-once-run-many model; dynamic shapes share its §7.5 limitation).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .codegen import Emitted, emit_pattern
+from .cost_model import Hardware, V5E
+from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind
+from .planner import PlanStats, make_plan, plan_stats
+from .tracer import bind_node, trace
+
+
+@dataclass
+class StitchReport:
+    """Everything the benchmarks want to know about one stitched function."""
+    stats: PlanStats
+    n_pallas: int
+    n_packed: int
+    scratch_bytes: int
+    scratch_naive_bytes: int
+    plan_time_s: float
+    patterns: list[frozenset] = field(default_factory=list)
+
+
+class _Compiled:
+    """One traced+planned+emitted instance for a fixed shape signature."""
+
+    def __init__(self, graph: Graph, plan: FusionPlan,
+                 emitted: list[Emitted], schedule: list[tuple[str, Any]],
+                 report: StitchReport, out_tree):
+        self.graph = graph
+        self.plan = plan
+        self.emitted = emitted
+        self.schedule = schedule  # [("pattern", Emitted) | ("node", nid)]
+        self.report = report
+        self.out_tree = out_tree
+
+    def __call__(self, flat_args):
+        graph = self.graph
+        env: dict[int, Any] = dict(zip(graph.inputs, flat_args))
+        for kind, item in self.schedule:
+            if kind == "node":
+                node = graph.node(item)
+                if node.kind is OpKind.CONST:
+                    env[item] = node.value
+                    continue
+                ins = [env[i] if i in env else graph.node(i).value
+                       for i in node.inputs]
+                env[item] = bind_node(node, ins)
+            else:
+                em: Emitted = item
+                outs = em.fn(*[env[i] for i in em.ext_ids])
+                for oid, val in zip(em.out_ids, outs):
+                    env[oid] = val
+        flat_out = [env[o] for o in graph.outputs]
+        return jax.tree_util.tree_unflatten(self.out_tree, flat_out)
+
+
+def _build_schedule(graph: Graph, emitted: list[Emitted]) -> list[tuple[str, Any]]:
+    """Topologically order macro-nodes (patterns + leftover singletons)."""
+    member_of: dict[int, int] = {}
+    for idx, em in enumerate(emitted):
+        for nid in em._members:  # type: ignore[attr-defined]
+            member_of[nid] = idx
+
+    done: set[int] = set(graph.inputs)
+    emitted_done = [False] * len(emitted)
+    schedule: list[tuple[str, Any]] = []
+    for nid in graph.topo_order():
+        if nid in done:
+            continue
+        idx = member_of.get(nid)
+        if idx is None:
+            schedule.append(("node", nid))
+            done.add(nid)
+            continue
+        if emitted_done[idx]:
+            continue
+        em = emitted[idx]
+        if all(e in done for e in em.ext_ids):
+            schedule.append(("pattern", em))
+            done.update(em._members)  # type: ignore[attr-defined]
+            emitted_done[idx] = True
+        else:
+            # defer: emit the node standalone is illegal (it's a member);
+            # instead postpone -- reinsert pattern when deps are ready.
+            # Because patterns are convex, walking ids in topo order and
+            # retrying at the *last* member always succeeds.
+            continue
+    # second sweep for deferred patterns (rare: ext produced between members)
+    for idx, em in enumerate(emitted):
+        if not emitted_done[idx]:
+            schedule.append(("pattern", em))
+            emitted_done[idx] = True
+    return schedule
+
+
+class StitchedFunction:
+    def __init__(self, fn: Callable, *, hw: Hardware = V5E,
+                 interpret: bool = True, use_remote_fusion: bool = True):
+        self._fn = fn
+        self._hw = hw
+        self._interpret = interpret
+        self._remote = use_remote_fusion
+        self._cache: dict[tuple, _Compiled] = {}
+
+    def _signature(self, flat_args) -> tuple:
+        return tuple((tuple(np.shape(a)), str(jnp.result_type(a)))
+                     for a in flat_args)
+
+    def _compile(self, args, kwargs) -> tuple[_Compiled, Any]:
+        flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        key = self._signature(flat)
+        if key in self._cache:
+            return self._cache[key], flat
+        t0 = time.perf_counter()
+
+        def flat_fn(*fargs):
+            a, k = jax.tree_util.tree_unflatten(in_tree, fargs)
+            return self._fn(*a, **k)
+
+        graph = trace(flat_fn, *flat)
+        plan = make_plan(graph, self._hw, use_remote_fusion=self._remote)
+        emitted: list[Emitted] = []
+        for pat in plan.patterns:
+            em = emit_pattern(graph, pat.members, hw=self._hw,
+                              interpret=self._interpret)
+            em._members = sorted(pat.members)  # type: ignore[attr-defined]
+            emitted.append(em)
+        schedule = _build_schedule(graph, emitted)
+        plan_time = time.perf_counter() - t0
+
+        stats = plan_stats(graph, plan)
+        report = StitchReport(
+            stats=stats,
+            n_pallas=sum(1 for e in emitted if e.kind == "pallas"),
+            n_packed=sum(1 for e in emitted if e.kind == "packed"),
+            scratch_bytes=sum(e.scratch_bytes for e in emitted),
+            scratch_naive_bytes=sum(e.scratch_naive_bytes for e in emitted),
+            plan_time_s=plan_time,
+            patterns=[p.members for p in plan.patterns],
+        )
+
+        # determine output tree
+        out_shape = jax.eval_shape(flat_fn, *flat)
+        _, out_tree = jax.tree_util.tree_flatten(out_shape)
+        compiled = _Compiled(graph, plan, emitted, schedule, report, out_tree)
+        self._cache[key] = compiled
+        return compiled, flat
+
+    def __call__(self, *args, **kwargs):
+        compiled, flat = self._compile(args, kwargs)
+        return compiled(flat)
+
+    def report(self, *args, **kwargs) -> StitchReport:
+        compiled, _ = self._compile(args, kwargs)
+        return compiled.report
+
+
+def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
+                 use_remote_fusion: bool = True,
+                 differentiable: bool = False) -> Callable:
+    """Wrap ``fn`` with the FusionStitching trace->plan->emit pipeline.
+
+    With ``differentiable=True`` the wrapper carries a ``custom_vjp`` whose
+    forward runs the stitched kernels and whose backward re-traces the VJP
+    of ``fn`` and stitches *it* too (recompute-style backward: residuals
+    are the primal inputs, matching the paper's training support where the
+    backward graph is just another fusion-planned graph).
+    """
+    sf = StitchedFunction(fn, hw=hw, interpret=interpret,
+                          use_remote_fusion=use_remote_fusion)
+    if not differentiable:
+        return sf
+
+    bwd_cache: dict[tuple, StitchedFunction] = {}
+
+    @jax.custom_vjp
+    def wrapped(*args):
+        return sf(*args)
+
+    def fwd(*args):
+        return sf(*args), args
+
+    def bwd(residuals, cts):
+        args = residuals
+        key = tuple((tuple(np.shape(a)), str(jnp.result_type(a)))
+                    for a in jax.tree_util.tree_leaves(args))
+        if key not in bwd_cache:
+            def vjp_fn(ct, *primals):
+                _, pullback = jax.vjp(fn, *primals)
+                return pullback(ct)
+            bwd_cache[key] = StitchedFunction(
+                vjp_fn, hw=hw, interpret=interpret,
+                use_remote_fusion=use_remote_fusion)
+        return bwd_cache[key](cts, *args)
+
+    wrapped.defvjp(fwd, bwd)
+    wrapped.report = sf.report  # type: ignore[attr-defined]
+    return wrapped
+
+
+def fusion_report(fn: Callable, *example_args, hw: Hardware = V5E,
+                  **example_kwargs) -> StitchReport:
+    """Plan ``fn`` on example inputs and return the plan statistics."""
+    sf = stitched_jit(fn, hw=hw)
+    return sf.report(*example_args, **example_kwargs)

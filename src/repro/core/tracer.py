@@ -1,0 +1,199 @@
+"""jaxpr -> IR tracer.
+
+This is the JIT entry point of the stitching compiler: any JAX-traceable
+function is turned into a ``repro.core.ir.Graph`` by walking its jaxpr.
+Call-like primitives (``pjit``, ``custom_jvp_call``, ``remat`` ...) are
+inlined so the planner sees the flat op graph, exactly as the paper's
+explorer sees XLA's post-optimization HLO graph.
+
+Every node keeps a handle to its jax primitive + raw params so arbitrary
+subgraphs remain *executable*: the stitch runtime evaluates unfused /
+packed patterns by re-binding primitives, and the Pallas emitter
+interprets the supported subset symbolically inside kernels.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import jax._src.core as jcore
+
+from .classify import classify
+from .ir import Graph, Node, OpKind, TensorSpec
+
+# primitives whose inner jaxpr we inline ("jit" is jax>=0.5's pjit)
+_INLINE_PRIMS = {
+    "jit", "pjit", "closed_call", "core_call", "custom_jvp_call",
+    "custom_vjp_call", "remat", "remat2", "checkpoint",
+    "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr",
+}
+
+
+def _spec_of(aval) -> TensorSpec:
+    return TensorSpec(tuple(int(d) for d in aval.shape), np.dtype(aval.dtype).name
+                      if aval.dtype != jnp.bfloat16 else "bfloat16")
+
+
+def _inner_jaxpr(params: dict):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in params:
+            inner = params[key]
+            if isinstance(inner, jcore.ClosedJaxpr):
+                return inner.jaxpr, inner.consts
+            return inner, []
+    return None, None
+
+
+class _Tracer:
+    def __init__(self) -> None:
+        self.graph = Graph()
+        self._next = 0
+
+    def _new_node(self, prim: str, kind: OpKind, inputs: Sequence[int],
+                  spec: TensorSpec, *, params=None, value=None, label="",
+                  jax_prim=None, raw_params=None) -> int:
+        p = dict(params or {})
+        if jax_prim is not None:
+            p["_prim"] = jax_prim
+            p["_raw_params"] = raw_params or {}
+        node = Node(self._next, prim, kind, tuple(inputs), spec, p, value, label)
+        self.graph.add(node)
+        self._next += 1
+        return node.nid
+
+    def _const_node(self, value) -> int:
+        arr = np.asarray(value)
+        spec = TensorSpec(tuple(arr.shape), arr.dtype.name)
+        return self._new_node("const", OpKind.CONST, (), spec, value=value)
+
+    def trace(self, closed: jcore.ClosedJaxpr) -> Graph:
+        env: dict[Any, int] = {}
+
+        def read(var) -> int:
+            if isinstance(var, jcore.Literal):
+                return self._const_node(var.val)
+            return env[var]
+
+        def write(var, nid: int) -> None:
+            env[var] = nid
+
+        jaxpr = closed.jaxpr
+        for v in jaxpr.invars:
+            nid = self._new_node("input", OpKind.INPUT, (), _spec_of(v.aval),
+                                 label=str(v))
+            self.graph.inputs.append(nid)
+            write(v, nid)
+        for v, c in zip(jaxpr.constvars, closed.consts):
+            write(v, self._const_node(c))
+
+        self._eval_eqns(jaxpr.eqns, read, write)
+
+        self.graph.outputs = [read(v) for v in jaxpr.outvars]
+        return self.graph
+
+    def _eval_eqns(self, eqns, read, write) -> None:
+        for eqn in eqns:
+            name = eqn.primitive.name
+            if name in _INLINE_PRIMS:
+                inner, consts = _inner_jaxpr(eqn.params)
+                if inner is not None:
+                    self._inline(inner, consts, eqn, read, write)
+                    continue
+            in_ids = [read(v) for v in eqn.invars]
+            kind = classify(name)
+            params = {k: v for k, v in eqn.params.items()
+                      if k in ("axes", "shape", "broadcast_dimensions",
+                               "permutation", "new_sizes", "dimensions",
+                               "new_dtype", "y")}
+            if len(eqn.outvars) == 1:
+                ov = eqn.outvars[0]
+                nid = self._new_node(name, kind, in_ids, _spec_of(ov.aval),
+                                     params=params, label=str(ov),
+                                     jax_prim=eqn.primitive,
+                                     raw_params=dict(eqn.params))
+                if not isinstance(ov, jcore.DropVar):
+                    write(ov, nid)
+            else:
+                # multi-output primitive: one OPAQUE node + projection nodes
+                nid = self._new_node(name, OpKind.OPAQUE, in_ids,
+                                     _spec_of(eqn.outvars[0].aval),
+                                     params={**params, "multi_out": len(eqn.outvars)},
+                                     label=name,
+                                     jax_prim=eqn.primitive,
+                                     raw_params=dict(eqn.params))
+                for idx, ov in enumerate(eqn.outvars):
+                    if isinstance(ov, jcore.DropVar):
+                        continue
+                    proj = self._new_node("tuple_get", OpKind.OPAQUE, (nid,),
+                                          _spec_of(ov.aval),
+                                          params={"index": idx})
+                    write(ov, proj)
+
+    def _inline(self, jaxpr, consts, eqn, read, write) -> None:
+        inner_env: dict[Any, int] = {}
+
+        def iread(var) -> int:
+            if isinstance(var, jcore.Literal):
+                return self._const_node(var.val)
+            return inner_env[var]
+
+        def iwrite(var, nid: int) -> None:
+            inner_env[var] = nid
+
+        outer_ids = [read(v) for v in eqn.invars]
+        # custom_jvp/vjp pass the callee consts as leading args in some
+        # versions; align on invars count.
+        invars = jaxpr.invars
+        if len(outer_ids) != len(invars):
+            outer_ids = outer_ids[len(outer_ids) - len(invars):]
+        for v, nid in zip(invars, outer_ids):
+            iwrite(v, nid)
+        for v, c in zip(jaxpr.constvars, consts):
+            iwrite(v, self._const_node(c))
+        self._eval_eqns(jaxpr.eqns, iread, iwrite)
+        for ov_outer, ov_inner in zip(eqn.outvars, jaxpr.outvars):
+            if isinstance(ov_outer, jcore.DropVar):
+                continue
+            if isinstance(ov_inner, jcore.Literal):
+                write(ov_outer, self._const_node(ov_inner.val))
+            else:
+                write(ov_outer, inner_env[ov_inner])
+
+
+def trace(fn: Callable, *example_args, **example_kwargs) -> Graph:
+    """Trace ``fn`` on example args (arrays or ShapeDtypeStructs) to a Graph."""
+    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    return _Tracer().trace(closed)
+
+
+# --------------------------------------------------------------------------
+# graph execution helpers (used by the stitch runtime for unfused / packed
+# patterns, and by tests as the node-level oracle)
+# --------------------------------------------------------------------------
+
+def bind_node(node: Node, invals: Sequence[Any]):
+    """Re-execute one traced node on concrete/traced values."""
+    if node.kind is OpKind.CONST:
+        return node.value
+    if node.prim == "tuple_get":
+        return invals[0][node.params["index"]]
+    prim = node.params.get("_prim")
+    if prim is None:
+        raise ValueError(f"node {node!r} is not executable")
+    out = prim.bind(*invals, **node.params.get("_raw_params", {}))
+    if prim.multiple_results and "multi_out" not in node.params:
+        out = out[0]  # single-outvar multi-result prim (e.g. un-inlined call)
+    return out
+
+
+def run_subgraph(graph: Graph, members: Sequence[int], env: dict[int, Any]) -> None:
+    """Evaluate ``members`` (topo-sorted ids) in-place into ``env``."""
+    for nid in sorted(members):
+        node = graph.node(nid)
+        if node.kind is OpKind.CONST:
+            env[nid] = node.value
+            continue
+        invals = [env[i] if i in env else graph.node(i).value for i in node.inputs]
+        env[nid] = bind_node(node, invals)

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline."""
+from .pipeline import DataConfig, DataState, SyntheticTokens
+
+__all__ = ["DataConfig", "DataState", "SyntheticTokens"]

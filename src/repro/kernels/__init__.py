@@ -1,0 +1,6 @@
+"""Pallas flagship kernels for the paper's memory-intensive patterns."""
+from . import ops, ref
+from .ops import attention, decode_attention, layernorm, rmsnorm, softmax, ssd_scan
+
+__all__ = ["ops", "ref", "attention", "decode_attention", "layernorm",
+           "rmsnorm", "softmax", "ssd_scan"]

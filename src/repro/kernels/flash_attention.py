@@ -1,0 +1,139 @@
+"""Flash attention as *block composition* (beyond-paper stitched kernel).
+
+The paper's block-composition scheme stages a producer's intermediate in
+on-chip memory so non-homogeneous consumers can reuse it (§4.1).  Online-
+softmax attention is exactly that scheme applied to ``matmul -> softmax ->
+matmul``: the running max/denominator/accumulator are VMEM-staged
+intermediates shared across the K-block loop, so the O(Sq*Skv) score
+matrix never touches HBM.  This is the streaming (two-accumulator)
+schedule the generic emitter does not synthesize — the hand-written
+flagship for long rows (32k-500k).
+
+Grid: (batch, q_heads, q_blocks, k_blocks); the last axis iterates
+sequentially on TPU, carrying (m, l, acc) scratch.  GQA is handled in the
+K/V index maps (kv_head = q_head // group) — no materialized repeat.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, sq: int, skv: int,
+                 blk_q: int, blk_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].reshape(blk_q, -1).astype(jnp.float32)   # [bq, D]
+    k = k_ref[...].reshape(blk_k, -1).astype(jnp.float32)   # [bk, D]
+    v = v_ref[...].reshape(blk_k, -1).astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_idx = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    k_idx = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = k_idx < skv                       # KV padding mask
+    if causal:
+        mask &= q_idx + (skv - sq) >= k_idx  # causal offset for Sq != Skv
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                       # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                    # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)           # rescale factor
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom).reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; returns [B, Hq, Sq, D]."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    blk_q = max(1, min(block_q, Sq))
+    blk_k = max(1, min(block_k, Skv))
+    Sqp = math.ceil(Sq / blk_q) * blk_q
+    Skp = math.ceil(Skv / blk_k) * blk_k
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skp != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0)))
+
+    grid = (B, Hq, Sqp // blk_q, Skp // blk_k)
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          sq=Sq, skv=Skv, blk_q=blk_q, blk_k=blk_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, blk_k, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, blk_k, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((blk_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq, :]
+
+
+def flash_decode(q, k_cache, v_cache, *, kv_len: int | None = None, scale=None,
+                 block_k: int = 512, interpret: bool = True):
+    """Decode-shape attention: q [B, Hq, D] against caches [B, Hkv, S, D].
+
+    Uses the same streaming kernel with a single q row per block; the
+    K-block axis does the long-context streaming (the 500k case).
+    ``kv_len`` (static) masks cache positions >= kv_len — the serve loop
+    passes the current decode position so a pre-allocated cache works.
+    """
+    B, Hq, D = q.shape
+    S = k_cache.shape[2]
+    eff = S if kv_len is None else int(kv_len)
+    if eff < S:  # restrict streaming to the live prefix
+        k_cache = k_cache[:, :, :eff, :]
+        v_cache = v_cache[:, :, :eff, :]
+    out = flash_attention(q[:, :, None, :], k_cache, v_cache, causal=False,
+                          scale=scale, block_q=1, block_k=min(block_k, eff),
+                          interpret=interpret)
+    return out[:, :, 0, :]

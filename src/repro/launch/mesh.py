@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; ``dryrun.py`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax init
+to obtain 512 placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; 2 pods when ``multi_pod``.
+
+    Axes: (pod,) data x model.  DP spans ("pod", "data"); TP spans
+    "model"; SP reuses "data" for batch=1 long-context cells.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (elastic-scaling tests resize DP with this)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh over the real local device (CPU smoke paths)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

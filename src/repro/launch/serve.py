@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill + greedy decode with KV/SSM caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
+      --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+
+def generate(mdl, params, prompts: np.ndarray, gen_len: int, *,
+             greedy: bool = True, key=None):
+    """prompts: [B, S] -> [B, S + gen_len] (greedy or sampled)."""
+    B, S = prompts.shape
+    max_len = S + gen_len
+    cache = mdl.init_cache(B, max_len)
+
+    prefill = jax.jit(lambda p, t, c: mdl.prefill(p, tokens=t, cache=c))
+    logits, cache = prefill(params, prompts, cache)
+    out = [prompts]
+    tok = jnp.argmax(logits[:, -1:, : mdl.cfg.vocab_size], axis=-1)
+
+    # kv_len = pos+1 (traced) masks the unwritten cache tail exactly; a
+    # static kv_len=max_len would let zero-keys inflate the softmax
+    # denominator.
+    decode = jax.jit(
+        lambda p, c, t, pos: mdl.decode_step(p, c, t, pos, kv_len=pos + 1))
+    for i in range(gen_len):
+        out.append(np.asarray(tok))
+        logits, cache = decode(params, cache, tok, jnp.asarray(S + i))
+        tok = jnp.argmax(logits[:, -1:, : mdl.cfg.vocab_size], axis=-1)
+    return np.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--fusion", default="stitched", choices=["stitched", "xla"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
+
+    mdl = build_model(cfg, fusion_mode=args.fusion)
+    params = mdl.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+
+    t0 = time.perf_counter()
+    seqs = generate(mdl, params, prompts, args.gen)
+    dt = time.perf_counter() - t0
+    tput = args.batch * args.gen / dt
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}: {dt:.2f}s  ({tput:.1f} tok/s incl. compile)")
+    print("sample:", seqs[0, args.prompt_len - 4:].tolist())
+
+
+if __name__ == "__main__":
+    main()

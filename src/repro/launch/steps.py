@@ -1,0 +1,206 @@
+"""Step-function builders + input specs for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct ``ShapeDtypeStruct`` stand-ins
+(no device allocation) for each step argument, plus the matching
+``PartitionSpec`` trees — the dry-run lowers against exactly these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.dist.partitioning import param_specs
+from repro.models.model import Model
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(mdl: Model, opt_cfg: optim.AdamWConfig,
+                    microbatches: int = 1):
+    """Train step with optional gradient accumulation.
+
+    ``microbatches > 1`` splits the per-step batch along the batch dim and
+    accumulates grads (unrolled, so dry-run cost analysis stays exact).
+    Halving the live activation footprint this way buys headroom for the
+    cheaper ``dots`` remat policy (§Perf hillclimb 3).
+    """
+    def _split(batch, i):
+        def sl(x):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+        return jax.tree_util.tree_map(sl, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(mdl.loss)(params, batch)
+        else:
+            loss = 0.0
+            grads = None
+            for i in range(microbatches):
+                li, gi = jax.value_and_grad(mdl.loss)(params,
+                                                      _split(batch, i))
+                loss = loss + li / microbatches
+                scale = 1.0 / microbatches
+                gi = jax.tree_util.tree_map(lambda g: g * scale, gi)
+                grads = gi if grads is None else jax.tree_util.tree_map(
+                    jnp.add, grads, gi)
+        grads, opt_state = optim.compress_grads(opt_cfg, grads, opt_state)
+        params, opt_state, metrics = optim.apply(opt_cfg, params, grads,
+                                                 opt_state)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(mdl: Model):
+    def prefill_step(params, batch, cache):
+        logits, new_cache = mdl.prefill(
+            params, tokens=batch.get("tokens"), cache=cache,
+            vision_embeds=batch.get("vision_embeds"),
+            frames=batch.get("frames"))
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_encoder_step(mdl: Model):
+    def encoder_step(params, batch):
+        logits, _, _ = mdl.apply(params, frames=batch["frames"])
+        return logits
+
+    return encoder_step
+
+
+def make_decode_step(mdl: Model, kv_len: int):
+    def decode_step(params, cache, tokens, pos):
+        logits, new_cache = mdl.decode_step(params, cache, tokens, pos,
+                                            kv_len=kv_len)
+        return logits, new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ArchConfig, cell: ShapeCell, act_dtype=jnp.bfloat16):
+    """Model-input ShapeDtypeStructs for one shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.frontend == "audio":
+        if cell.kind == "train":
+            return {"frames": _sds((B, S, cfg.frontend_dim), act_dtype),
+                    "labels": _sds((B, S), jnp.int32)}
+        return {"frames": _sds((B, S, cfg.frontend_dim), act_dtype)}
+    out: dict[str, Any] = {}
+    if cell.kind == "train":
+        out["tokens"] = _sds((B, S + 1), jnp.int32)
+    elif cell.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = _sds((B, 1), jnp.int32)
+    if cfg.frontend == "vision" and cell.kind != "decode":
+        out["vision_embeds"] = _sds((B, cfg.n_vision_tokens, cfg.d_model),
+                                    act_dtype)
+    return out
+
+
+def batch_pspecs(cfg: ArchConfig, cell: ShapeCell, mesh) -> dict:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    shard_batch = dp if cell.global_batch > 1 else None
+    specs = {}
+    for k in batch_specs(cfg, cell):
+        if k in ("tokens", "labels"):
+            specs[k] = P(shard_batch, None)
+        elif k == "frames":
+            specs[k] = P(shard_batch, "data" if cell.global_batch == 1 else None, None)
+        else:  # vision_embeds
+            specs[k] = P(shard_batch, None, None)
+    return specs
+
+
+def kv_seq_axes(cfg: ArchConfig, cell: ShapeCell, mesh):
+    """Mesh axes the KV-cache sequence dim shards over (decode cells).
+
+    Sharding the cache S dim over "model" turns decode attention into a
+    distributed flash decode: per-device cache reads drop by TP, and the
+    softmax over the sharded dim costs only tiny stat all-reduces
+    (EXPERIMENTS.md §Perf hillclimb 2).  batch=1 long-context cells also
+    fold "data" in (SP), using the whole mesh on one sequence.
+    """
+    if cell.kind != "decode":
+        return None
+    axes = tuple(a for a in (("data", "pod") if cell.global_batch == 1
+                             else ()) if a in mesh.axis_names)
+    if "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    if not axes:
+        return None
+    shard = 1
+    for a in axes:
+        shard *= mesh.shape[a]
+    return axes if cell.seq_len % shard == 0 else None
+
+
+def cache_pspecs(cfg: ArchConfig, cell: ShapeCell, mesh, cache_struct):
+    """Sharding for the KV / SSM cache: batch over DP; decode cells shard
+    the cache sequence dim over TP (+DP when batch=1)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    b1 = cell.global_batch == 1
+    tp = "model" if "model" in mesh.axis_names else None
+    bspec = None if b1 else dp
+    sseq = kv_seq_axes(cfg, cell, mesh)
+    if sseq is None and b1:
+        sseq = "data" if "data" in mesh.axis_names else None
+
+    def assign(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        nd = len(leaf.shape)
+        if "mamba" in names and "ssm" in names:
+            core = [bspec, tp, None, None]        # [B, H, P, N]
+        elif "mamba" in names:                    # conv state [B, W-1, cd]
+            core = [bspec, None, tp]
+        else:                                     # attn kv [B, Hkv, S, Dh]
+            core = [bspec, None, sseq, None]
+        pad = nd - len(core)                      # stacked-layer leading axes
+        return P(*([None] * pad + core))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_struct)
+
+
+def opt_pspecs(params_specs, zero1: bool = False, data_axis: str = "data",
+               params_struct=None):
+    """Optimizer-state PartitionSpecs: moments follow params; ZeRO-1
+    additionally shards the first replicated dim of each moment over DP."""
+    def zero_shard(spec, leaf):
+        if not zero1 or leaf is None:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (p, d) in enumerate(zip(parts, leaf.shape)):
+            if p is None and d % 16 == 0:
+                parts[i] = data_axis
+                break
+        return P(*parts)
+
+    if params_struct is None:
+        moments = params_specs
+    else:
+        moments = jax.tree_util.tree_map(
+            zero_shard, params_specs, params_struct,
+            is_leaf=lambda s: isinstance(s, P))
+    return {"step": P(), "m": moments, "v": moments}
+
+
+def metric_pspecs():
+    return {"loss": P(), "grad_norm": P(), "lr": P()}

@@ -1,0 +1,5 @@
+"""Model zoo: unified facade over the assigned architecture families."""
+from .layers import STITCHED, XLA, FusionMode
+from .model import Model, build_model
+
+__all__ = ["STITCHED", "XLA", "FusionMode", "Model", "build_model"]

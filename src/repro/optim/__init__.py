@@ -1,0 +1,5 @@
+"""Pure-JAX optimizers."""
+from .adamw import AdamWConfig, apply, compress_grads, global_norm, init, schedule
+
+__all__ = ["AdamWConfig", "apply", "compress_grads", "global_norm", "init",
+           "schedule"]

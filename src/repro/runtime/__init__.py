@@ -1,0 +1,4 @@
+"""Fault tolerance, straggler mitigation, elasticity."""
+from .fault_tolerance import RestartableLoop, StragglerMonitor
+
+__all__ = ["RestartableLoop", "StragglerMonitor"]

@@ -1,0 +1,4 @@
+"""Serving substrate: continuous-batching scheduler."""
+from .scheduler import ContinuousBatcher, Request, ServeStats
+
+__all__ = ["ContinuousBatcher", "Request", "ServeStats"]

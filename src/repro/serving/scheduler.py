@@ -1,0 +1,147 @@
+"""Continuous-batching serving scheduler.
+
+vLLM-style slot management adapted to the JAX step model: a fixed pool
+of ``n_slots`` decode slots advances in lock-step (one jitted vmap'd
+decode per wave), each slot carrying its own KV/SSM cache and position;
+finished slots are refilled from the queue mid-flight via a single-slot
+prefill written into the stacked cache (no global re-batch, no pause of
+in-flight requests).
+
+Simplifications vs a full vLLM (documented): greedy decoding; idle slots
+still burn a decode lane (masked out functionally); prefills are
+one-slot-at-a-time (chunked-prefill interleaving is future work).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int
+    out: list[int] = field(default_factory=list)
+    pos: int = 0                  # next cache position
+    done: bool = False
+
+
+@dataclass
+class ServeStats:
+    prefills: int = 0
+    decode_waves: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+
+class ContinuousBatcher:
+    def __init__(self, mdl: Model, params, *, n_slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None):
+        self.mdl = mdl
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * n_slots
+        self._ids = itertools.count()
+        self.stats = ServeStats()
+
+        one = mdl.init_cache(1, max_len)
+        self.cache = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n_slots,) + x.shape, x.dtype), one)
+
+        self._prefill = jax.jit(
+            lambda p, t, c: mdl.prefill(p, tokens=t, cache=c))
+
+        def _decode_one(cache_slot, tok, pos):
+            logits, nc = mdl.decode_step(self.params, cache_slot, tok, pos,
+                                         kv_len=pos + 1)
+            return logits[:, -1, : mdl.cfg.vocab_size], nc
+
+        self._decode_wave = jax.jit(jax.vmap(_decode_one))
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        assert len(prompt) + max_new <= self.max_len, "request exceeds slot"
+        req = Request(next(self._ids), np.asarray(prompt, np.int32), max_new)
+        self.queue.append(req)
+        return req.rid
+
+    def run(self) -> dict[int, list[int]]:
+        """Drive until queue + slots drain.  Returns rid -> generated ids."""
+        t0 = time.perf_counter()
+        results: dict[int, list[int]] = {}
+        self._fill_slots()
+        while any(s is not None for s in self.slots):
+            self._decode_step()
+            for i, req in enumerate(self.slots):
+                if req is not None and req.done:
+                    results[req.rid] = req.out
+                    self.slots[i] = None
+            self._fill_slots()
+        self.stats.wall_s += time.perf_counter() - t0
+        return results
+
+    # -- internals ---------------------------------------------------------------
+    def _fill_slots(self) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_slot(i, req)
+                self.slots[i] = req
+
+    def _prefill_slot(self, i: int, req: Request) -> None:
+        one = self.mdl.init_cache(1, self.max_len)
+        logits, filled = self._prefill(self.params,
+                                       req.prompt[None, :], one)
+        self.cache = jax.tree_util.tree_map(
+            lambda st, c: st.at[i].set(c), self.cache, filled)
+        first = int(jnp.argmax(logits[0, -1, : self.mdl.cfg.vocab_size]))
+        req.out.append(first)
+        req.pos = len(req.prompt)
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+        self._check_done(req)
+
+    def _decode_step(self) -> None:
+        toks = np.zeros((self.n_slots, 1, 1), np.int32)
+        poss = np.zeros((self.n_slots,), np.int32)
+        active = []
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            toks[i, 0, 0] = req.out[-1]
+            poss[i] = req.pos
+            active.append(i)
+        if not active:
+            return
+        logits, self.cache = self._decode_wave(
+            self.cache, jnp.asarray(toks), jnp.asarray(poss))
+        self.stats.decode_waves += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in active:
+            req = self.slots[i]
+            req.out.append(int(nxt[i]))
+            req.pos += 1
+            self.stats.tokens_out += 1
+            self._check_done(req)
+
+    def _check_done(self, req: Request) -> None:
+        if len(req.out) >= req.max_new or \
+                (self.eos_id is not None and req.out[-1] == self.eos_id) or \
+                req.pos + 1 >= self.max_len:
+            req.done = True

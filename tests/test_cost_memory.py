@@ -1,0 +1,118 @@
+"""Cost-model + memory-planner invariants (paper §4.3, §4.4, §5.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import V5E, best_estimate, delta_evaluator, trace
+from repro.core.cost_model import estimate_onepass, estimate_packed, estimate_unfused
+from repro.core.ir import FUSIBLE_KINDS
+from repro.core.memory_planner import dominators, plan_scratch
+from repro.core.rowspec import analyze
+
+
+def _ln_graph(R=64, C=128):
+    def ln(x, g, b):
+        m = jnp.mean(x, axis=-1, keepdims=True)
+        v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+        return (x - m) * jax.lax.rsqrt(v + 1e-6) * g + b
+    return trace(ln, np.zeros((R, C), np.float32),
+                 np.zeros(C, np.float32), np.zeros(C, np.float32))
+
+
+def _full_pattern(G):
+    return frozenset(n for n in G.fusible_nodes())
+
+
+def test_delta_zero_for_singletons():
+    G = _ln_graph()
+    for nid in G.fusible_nodes():
+        assert delta_evaluator(G, frozenset({nid})) == 0.0
+
+
+def test_delta_positive_for_layernorm_fusion():
+    G = _ln_graph()
+    assert delta_evaluator(G, _full_pattern(G)) > 0
+
+
+def test_latency_onepass_beats_unfused_for_ln():
+    G = _ln_graph()
+    pat = _full_pattern(G)
+    best = best_estimate(G, pat)
+    unf = estimate_unfused(G, pat)
+    assert best.latency_s < unf.latency_s
+    assert best.schedule in ("onepass", "packed")
+
+
+def test_latency_monotone_in_rows():
+    lat = {}
+    for R in (64, 256):
+        G = _ln_graph(R=R)
+        pat = _full_pattern(G)
+        info = analyze(G, pat)
+        lat[R] = estimate_onepass(G, pat, info, 64).latency_s
+    assert lat[256] > lat[64]
+
+
+def test_packed_estimate_positive_and_single_launch():
+    G = _ln_graph()
+    est = estimate_packed(G, _full_pattern(G))
+    assert est.latency_s > 0 and est.n_steps == 1
+
+
+# -- memory planner ---------------------------------------------------------
+def test_scratch_reuse_is_legal_and_smaller():
+    G = _ln_graph()
+    pat = _full_pattern(G)
+    info = analyze(G, pat)
+    plan = plan_scratch(G, pat, info)
+    assert plan.total_bytes <= plan.naive_bytes
+    # legality: two values in the same slot must have disjoint live ranges
+    order = sorted(pat)
+    pos = {n: i for i, n in enumerate(order)}
+    outs = set(G.pattern_outputs(pat))
+    last_use = {}
+    for nid in order:
+        for i in G.node(nid).inputs:
+            if i in pat:
+                last_use[i] = pos[nid]
+    for o in outs:
+        last_use[o] = len(order)
+    by_slot = {}
+    for nid, slot in plan.slot_of.items():
+        by_slot.setdefault(slot, []).append(nid)
+    for slot, members in by_slot.items():
+        members.sort(key=lambda n: pos[n])
+        for a, b in zip(members, members[1:]):
+            assert last_use.get(a, pos[a]) <= pos[b], \
+                f"slot {slot}: {a} still live when {b} allocated"
+
+
+def test_dominator_sets_sane():
+    G = _ln_graph()
+    pat = _full_pattern(G)
+    doms = dominators(G, pat)
+    for nid, d in doms.items():
+        assert nid in d  # every node dominates itself
+
+
+@given(st.integers(2, 40), st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_scratch_never_exceeds_naive(depth, width):
+    """Property: slot sharing can only shrink total scratch."""
+    def chain(x):
+        vals = [x]
+        for i in range(depth):
+            vals.append(jnp.tanh(vals[max(0, i - width)]) + vals[-1])
+        return vals[-1] / (jnp.sum(vals[-1], -1, keepdims=True) + 1.0)
+
+    G = trace(chain, np.zeros((4, 32), np.float32))
+    pat = frozenset(G.fusible_nodes())
+    if not G.is_convex(pat):
+        return
+    info = analyze(G, pat)
+    if info is None:
+        return
+    plan = plan_scratch(G, pat, info)
+    assert plan.total_bytes <= plan.naive_bytes
+    assert plan.total_bytes > 0

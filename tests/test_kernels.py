@@ -1,0 +1,165 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == "bfloat16" \
+        else dict(rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 128), (2, 7, 256), (1, 1024),
+                                   (5, 130)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_layernorm_sweep(shape, dtype):
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    g = jnp.asarray(rng.standard_normal(shape[-1]), dtype)
+    b = jnp.asarray(rng.standard_normal(shape[-1]), dtype)
+    out = ops.layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (2, 3, 96), (1, 2048)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    g = jnp.asarray(rng.standard_normal(shape[-1]), dtype)
+    np.testing.assert_allclose(
+        np.asarray(ops.rmsnorm(x, g), np.float32),
+        np.asarray(ref.rmsnorm(x, g), np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(8, 32), (2, 4, 333), (1, 4096)])
+def test_softmax_sweep(shape):
+    x = jnp.asarray(rng.standard_normal(shape) * 4, jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.softmax(x)),
+                               np.asarray(ref.softmax(x)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_norm_grads_match_oracle():
+    x = rng.standard_normal((6, 80)).astype(np.float32)
+    g = rng.standard_normal(80).astype(np.float32)
+    b = rng.standard_normal(80).astype(np.float32)
+    f_k = lambda *a: jnp.sum(jnp.sin(ops.layernorm(*a)))
+    f_r = lambda *a: jnp.sum(jnp.sin(ref.layernorm(*a)))
+    gk = jax.grad(f_k, (0, 1, 2))(x, g, b)
+    gr = jax.grad(f_r, (0, 1, 2))(x, g, b)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("hq,hkv,sq,skv,bq,bk", [
+    (4, 4, 64, 64, 16, 16),       # MHA square
+    (8, 2, 100, 100, 32, 32),     # GQA, unaligned seq
+    (4, 1, 16, 80, 8, 16),        # MQA cross (prefill continuation)
+    (6, 2, 33, 33, 64, 64),       # block > seq
+])
+def test_flash_attention_sweep(hq, hkv, sq, skv, bq, bk):
+    q = rng.standard_normal((2, hq, sq, 32)).astype(np.float32)
+    k = rng.standard_normal((2, hkv, skv, 32)).astype(np.float32)
+    v = rng.standard_normal((2, hkv, skv, 32)).astype(np.float32)
+    out = ops.attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_noncausal_and_bf16():
+    q = jnp.asarray(rng.standard_normal((1, 4, 48, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 4, 48, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 4, 48, 64)), jnp.bfloat16)
+    out = ops.attention(q, k, v, causal=False, block_q=16, block_k=16)
+    want = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_grads():
+    q = rng.standard_normal((1, 2, 32, 16)).astype(np.float32)
+    k = rng.standard_normal((1, 2, 32, 16)).astype(np.float32)
+    v = rng.standard_normal((1, 2, 32, 16)).astype(np.float32)
+    f_k = lambda *a: jnp.sum(ops.attention(*a, causal=True) ** 2)
+    f_r = lambda *a: jnp.sum(ref.attention(*a, causal=True) ** 2)
+    gk = jax.grad(f_k, (0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, (0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("kvlen", [96, 64, 40])
+def test_flash_decode(kvlen):
+    q = rng.standard_normal((2, 8, 64)).astype(np.float32)
+    kc = rng.standard_normal((2, 2, 96, 64)).astype(np.float32)
+    vc = rng.standard_normal((2, 2, 96, 64)).astype(np.float32)
+    out = ops.decode_attention(q, kc, vc, kv_len=kvlen, block_k=32)
+    want = ops.decode_attention(q, kc, vc, kv_len=kvlen, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("L,H,P,N,chunk", [
+    (64, 2, 16, 16, 16), (128, 4, 32, 64, 32), (96, 1, 64, 128, 48),
+])
+def test_ssd_scan_sweep(L, H, P, N, chunk):
+    b = 2
+    x = (rng.standard_normal((b, L, H, P)) * 0.5).astype(np.float32)
+    dt = (np.abs(rng.standard_normal((b, L, H))) * 0.1 + 0.01).astype(np.float32)
+    A = -np.abs(rng.standard_normal(H)).astype(np.float32)
+    B = (rng.standard_normal((b, L, N)) * 0.5).astype(np.float32)
+    C = (rng.standard_normal((b, L, N)) * 0.5).astype(np.float32)
+    y1, s1 = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y2, s2 = ref.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunking (algebraic identity)."""
+    b, L, H, P, N = 1, 128, 2, 16, 32
+    x = (rng.standard_normal((b, L, H, P)) * 0.5).astype(np.float32)
+    dt = (np.abs(rng.standard_normal((b, L, H))) * 0.1 + 0.01).astype(np.float32)
+    A = -np.abs(rng.standard_normal(H)).astype(np.float32)
+    B = (rng.standard_normal((b, L, N)) * 0.5).astype(np.float32)
+    C = (rng.standard_normal((b, L, N)) * 0.5).astype(np.float32)
+    y32, s32 = ref.ssd_scan(x, dt, A, B, C, chunk=32)
+    y64, s64 = ref.ssd_scan(x, dt, A, B, C, chunk=64)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y64),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s32), np.asarray(s64),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == the literal h_t = h_{t-1} e^{dt A} + dt B x recurrence."""
+    b, L, H, P, N = 1, 32, 2, 8, 8
+    x = (rng.standard_normal((b, L, H, P)) * 0.5).astype(np.float32)
+    dt = (np.abs(rng.standard_normal((b, L, H))) * 0.1 + 0.01).astype(np.float32)
+    A = -np.abs(rng.standard_normal(H)).astype(np.float32)
+    B = (rng.standard_normal((b, L, N)) * 0.5).astype(np.float32)
+    C = (rng.standard_normal((b, L, N)) * 0.5).astype(np.float32)
+
+    h = np.zeros((b, H, P, N), np.float32)
+    ys = np.zeros((b, L, H, P), np.float32)
+    for t in range(L):
+        decay = np.exp(dt[:, t] * A[None, :])           # [b,H]
+        upd = np.einsum("bh,bn,bhp->bhpn", dt[:, t], B[:, t], x[:, t])
+        h = h * decay[..., None, None] + upd
+        ys[:, t] = np.einsum("bn,bhpn->bhp", C[:, t], h)
+
+    y, state = ref.ssd_scan(x, dt, A, B, C, chunk=8)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), h, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (required deliverable f):
+
+Every assigned arch instantiates a REDUCED same-family config, runs one
+forward + one train step on CPU, asserts output shapes and no NaNs.
+Plus family-specific behaviors: decode consistency, MoE balance loss,
+hybrid shared-attention wiring, stitched/xla parity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+rng = np.random.default_rng(0)
+
+
+def _batch(cfg, B=2, S=32):
+    if cfg.frontend == "audio":
+        return {"frames": rng.standard_normal((B, S, cfg.frontend_dim)
+                                              ).astype(np.float32),
+                "labels": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)}
+    out = {"tokens": rng.integers(0, cfg.vocab_size, (B, S + 1)).astype(np.int32)}
+    if cfg.frontend == "vision":
+        out["vision_embeds"] = rng.standard_normal(
+            (B, cfg.n_vision_tokens, cfg.d_model)).astype(np.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    mdl = build_model(cfg, fusion_mode="xla", remat=False)
+    params = mdl.init(KEY)
+    batch = _batch(cfg)
+
+    # forward: logits shape + finite
+    if cfg.frontend == "audio":
+        logits, _, _ = mdl.apply(params, frames=batch["frames"])
+        assert logits.shape == (2, 32, cfg.padded_vocab)
+    else:
+        logits, _, _ = mdl.apply(params, tokens=batch["tokens"][:, :-1],
+                                 vision_embeds=batch.get("vision_embeds"))
+        assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size])))
+
+    # one train step: loss finite and params change
+    opt_cfg = optim.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(make_train_step(mdl, opt_cfg))
+    opt_state = optim.init(opt_cfg, params)
+    new_params, _, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params)))
+    assert moved, "train step must update params"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma-7b", "mamba2-370m"])
+def test_stitched_equals_xla(arch):
+    cfg = get_config(arch).reduced()
+    batch = _batch(cfg)
+    params = build_model(cfg, fusion_mode="xla").init(KEY)
+    lx = build_model(cfg, fusion_mode="xla").loss(params, batch)
+    ls = build_model(cfg, fusion_mode="stitched").loss(params, batch)
+    assert abs(float(lx) - float(ls)) < 1e-4
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-370m",
+                                  "zamba2-1.2b", "granite-moe-1b-a400m"])
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:  # disable token dropping for exactness
+        cfg = dataclasses.replace(cfg, capacity_factor=4.0)
+    mdl = build_model(cfg, fusion_mode="xla")
+    params = mdl.init(KEY)
+    B, S = 1, 16
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    full, _, _ = mdl.apply(params, tokens=toks)
+    cache = mdl.init_cache(B, max_len=S)
+    _, cache = mdl.prefill(params, tokens=toks[:, : S - 1], cache=cache)
+    l_dec, _ = mdl.decode_step(params, cache, toks[:, S - 1:], pos=S - 1,
+                               kv_len=S)
+    np.testing.assert_allclose(np.asarray(l_dec[:, 0]),
+                               np.asarray(full[:, S - 1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_encoder_has_no_decode():
+    cfg = get_config("hubert-xlarge")
+    assert not cfg.supports_decode
+
+
+def test_moe_aux_loss_nonzero_and_capacity_drops():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    mdl = build_model(cfg, fusion_mode="xla")
+    params = mdl.init(KEY)
+    batch = _batch(cfg)
+    _, _, aux = mdl.apply(params, tokens=batch["tokens"][:, :-1])
+    assert float(aux) > 0.0
+
+
+def test_hybrid_shared_attention_is_shared():
+    cfg = get_config("zamba2-1.2b").reduced()
+    mdl = build_model(cfg, fusion_mode="xla")
+    params = mdl.init(KEY)
+    # exactly one shared attn param set regardless of depth
+    assert "shared_attn" in params
+    assert len(params["blocks"]) == cfg.n_layers
+    # zeroing the shared block changes outputs (it is actually applied)
+    batch = _batch(cfg)
+    l0 = float(mdl.loss(params, batch))
+    params2 = jax.tree_util.tree_map(lambda x: x, params)
+    params2["shared_attn"] = jax.tree_util.tree_map(
+        jnp.zeros_like, params["shared_attn"])
+    l1 = float(mdl.loss(params2, batch))
+    assert abs(l0 - l1) > 1e-6
+
+
+def test_vocab_padding_masked():
+    cfg = get_config("mamba2-370m").reduced(vocab_size=500)  # pads to 512
+    mdl = build_model(cfg, fusion_mode="xla")
+    params = mdl.init(KEY)
+    logits, _, _ = mdl.apply(
+        params, tokens=rng.integers(0, 500, (1, 8)).astype(np.int32))
+    assert logits.shape[-1] == 512
+    assert bool(jnp.all(logits[..., 500:] < -1e29)), "pad logits masked"
+
+
+def test_loss_decreases_quickly():
+    """Integration: 20 steps on synthetic data reduce loss materially."""
+    from repro.data import DataConfig, SyntheticTokens
+    cfg = get_config("llama3.2-3b").reduced()
+    mdl = build_model(cfg, fusion_mode="xla", remat=False)
+    params = mdl.init(KEY)
+    opt_cfg = optim.AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=20)
+    step = jax.jit(make_train_step(mdl, opt_cfg))
+    opt_state = optim.init(opt_cfg, params)
+    data = SyntheticTokens(DataConfig(seed=0, global_batch=4, seq_len=64), cfg)
+    losses = []
+    for i in range(20):
+        params, opt_state, m = step(params, opt_state, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses

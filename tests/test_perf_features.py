@@ -1,0 +1,140 @@
+"""Tests for the §Perf hillclimb features: sort-dispatch MoE, microbatch
+gradient accumulation, remat policies, decode cache sharding, sharding
+divisibility repair."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeCell
+from repro.launch.steps import kv_seq_axes, make_train_step
+from repro.models import build_model
+from repro.models.layers import FusionMode, moe_apply, moe_init
+
+KEY = jax.random.PRNGKey(0)
+rng = np.random.default_rng(3)
+
+
+# -- MoE sort dispatch ---------------------------------------------------------
+@pytest.mark.parametrize("E,k,G,T", [(4, 2, 3, 16), (8, 4, 2, 32), (3, 1, 1, 8)])
+def test_moe_sort_matches_einsum_no_drops(E, k, G, T):
+    cfg = dataclasses.replace(
+        get_config("granite-moe-1b-a400m").reduced(),
+        n_experts=E, top_k=k, capacity_factor=float(E * 2))
+    p = moe_init(cfg, KEY, jnp.float32)
+    x = rng.standard_normal((G, T, cfg.d_model)).astype(np.float32)
+    y1, a1 = moe_apply(cfg, p, x, FusionMode("xla"), impl="einsum")
+    y2, a2 = moe_apply(cfg, p, x, FusionMode("xla"), impl="sort")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    assert abs(float(a1) - float(a2)) < 1e-5
+
+
+def test_moe_sort_drops_overflow_tokens():
+    cfg = dataclasses.replace(
+        get_config("granite-moe-1b-a400m").reduced(),
+        n_experts=2, top_k=2, capacity_factor=0.25)  # capacity << demand
+    p = moe_init(cfg, KEY, jnp.float32)
+    x = rng.standard_normal((1, 32, cfg.d_model)).astype(np.float32)
+    y, _ = moe_apply(cfg, p, x, FusionMode("xla"), impl="sort")
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # dropped tokens pass through as zeros => strictly smaller norm than
+    # the no-drop configuration
+    cfg2 = dataclasses.replace(cfg, capacity_factor=8.0)
+    y2, _ = moe_apply(cfg2, p, x, FusionMode("xla"), impl="sort")
+    assert float(jnp.linalg.norm(y)) < float(jnp.linalg.norm(y2))
+
+
+def test_moe_sort_grads_flow():
+    cfg = get_config("granite-moe-1b-a400m").reduced()  # sort by default
+    assert cfg.moe_impl == "sort"
+    mdl = build_model(cfg, fusion_mode="xla")
+    params = mdl.init(KEY)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (2, 17)).astype(np.int32)}
+    g = jax.grad(mdl.loss)(params, batch)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+    router_g = g["blocks"]["moe"]["router"]
+    assert float(jnp.max(jnp.abs(router_g))) > 0
+
+
+# -- microbatching ----------------------------------------------------------------
+def test_microbatched_step_matches_single_batch():
+    cfg = get_config("llama3.2-3b").reduced()
+    mdl = build_model(cfg, fusion_mode="xla", remat=False)
+    params = mdl.init(KEY)
+    opt_cfg = optim.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (4, 33)).astype(np.int32)}
+
+    s1 = make_train_step(mdl, opt_cfg, microbatches=1)
+    s2 = make_train_step(mdl, opt_cfg, microbatches=2)
+    o1 = optim.init(opt_cfg, params)
+    o2 = optim.init(opt_cfg, params)
+    p1, _, m1 = jax.jit(s1)(params, o1, batch)
+    p2, _, m2 = jax.jit(s2)(params, o2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# -- remat policies -----------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["full", "dots", "none"])
+def test_remat_policies_same_loss(policy):
+    cfg = get_config("llama3.2-3b").reduced()
+    mdl = build_model(cfg, fusion_mode="xla", remat=True,
+                      remat_policy=policy)
+    params = mdl.init(KEY)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (2, 17)).astype(np.int32)}
+    loss = float(mdl.loss(params, batch))
+    ref = float(build_model(cfg, fusion_mode="xla", remat=False
+                            ).loss(params, batch))
+    assert abs(loss - ref) < 1e-5
+
+
+# -- decode cache sharding ------------------------------------------------------------
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_kv_seq_axes_rules():
+    cfg = get_config("deepseek-67b")
+    mesh = _FakeMesh()
+    assert kv_seq_axes(cfg, SHAPES["decode_32k"], mesh) == ("model",)
+    assert kv_seq_axes(cfg, SHAPES["train_4k"], mesh) is None
+    assert kv_seq_axes(cfg, SHAPES["prefill_32k"], mesh) is None
+    # batch=1 long context folds data in
+    axes = kv_seq_axes(cfg, SHAPES["long_500k"], mesh)
+    assert axes == ("data", "model")
+    # non-divisible seq falls back to None
+    odd = ShapeCell("odd", 1000, 128, "decode")
+    assert kv_seq_axes(cfg, odd, mesh) is None
+
+
+# -- sharding divisibility repair -------------------------------------------------------
+def test_fit_spec_moves_or_replicates():
+    from repro.dist.partitioning import _fit_spec
+    mesh = _FakeMesh()
+    # 40 experts % 16 != 0 -> expert axis moves to a divisible dim
+    # (searches from the last dim: d_ff=512 here, matching the moe_tp rule)
+    spec = _fit_spec(P("model", None, None), (40, 1536, 512), mesh)
+    assert spec == P(None, None, "model")
+    # divisible stays
+    spec = _fit_spec(P("model", None), (32, 7), mesh)
+    assert spec == P("model", None)
+    # nothing divisible -> replicate
+    spec = _fit_spec(P("model",), (7,), mesh)
+    assert spec == P(None,)
+
+
+def test_vocab_padding_divisible_for_all_archs():
+    from repro.configs import ARCH_IDS
+    for a in ARCH_IDS:
+        assert get_config(a).padded_vocab % 256 == 0
