@@ -14,11 +14,13 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig1", "table2", "fig7", "overhead", "roofline"])
+                    choices=["fig1", "table2", "fig7", "overhead", "roofline",
+                             "plan_time"])
     args = ap.parse_args()
 
     from . import (bench_fig1_layernorm, bench_fig7_speedup,
-                   bench_overhead, bench_table2_breakdown, roofline)
+                   bench_overhead, bench_plan_time, bench_table2_breakdown,
+                   roofline)
 
     suites = {
         "fig1": bench_fig1_layernorm.run,
@@ -26,6 +28,7 @@ def main() -> None:
         "fig7": bench_fig7_speedup.run,
         "overhead": bench_overhead.run,
         "roofline": roofline.run,
+        "plan_time": bench_plan_time.run,
     }
     selected = [args.only] if args.only else list(suites)
 

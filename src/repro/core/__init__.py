@@ -1,13 +1,17 @@
 """FusionStitching core: the paper's contribution as a composable JAX module."""
+from .costctx import CostContext, NullContext
 from .cost_model import Hardware, V5E, best_estimate, delta_evaluator
 from .ir import FusionPlan, Graph, Node, OpKind, Pattern
+from .plan_cache import PlanCache, graph_signature
 from .planner import make_plan, plan_stats
 from .stitch import StitchedFunction, fusion_report, stitched_jit
 from .tracer import trace
 
 __all__ = [
+    "CostContext", "NullContext",
     "Hardware", "V5E", "best_estimate", "delta_evaluator",
     "FusionPlan", "Graph", "Node", "OpKind", "Pattern",
+    "PlanCache", "graph_signature",
     "make_plan", "plan_stats",
     "StitchedFunction", "fusion_report", "stitched_jit",
     "trace",

@@ -1,0 +1,105 @@
+"""Measured block-schedule autotuning (optional, accelerator-gated).
+
+The analytic latency-evaluator picks ``BLOCK_ROWS`` / streaming tiles
+from the roofline model; on real hardware the best launch dims can
+deviate (padding effects, DMA granularity).  ``tune_pattern`` sweeps the
+same candidate space the analytic model enumerates, but *measures* each
+emitted kernel on dummy inputs and returns the fastest as a schedule
+override -- which the persistent plan cache then records, giving the
+paper's tune-once-run-many behavior.
+
+Gating: measuring wall time in Pallas interpret mode on CPU says nothing
+about TPU latency, so the sweep runs only when an accelerator backend is
+present (or ``REPRO_AUTOTUNE=force`` for tests / CI smoke).  Otherwise
+the caller falls back to the analytic cost model.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from .codegen import emit_pattern, pattern_emittable
+from .cost_model import BLOCK_ROWS, STREAM_TILES, Hardware, V5E
+from .ir import Graph
+
+#: Env switch: "force" measures even without an accelerator (tests).
+ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+
+
+def autotune_available() -> bool:
+    """Measured tuning is meaningful only on a real accelerator."""
+    if os.environ.get(ENV_AUTOTUNE, "").lower() == "force":
+        return True
+    try:
+        import jax
+
+        return jax.default_backend() not in ("cpu",)
+    except Exception:  # noqa: BLE001 - no backend -> analytic fallback
+        return False
+
+
+def _candidate_overrides(info) -> list[dict]:
+    cands: list[dict] = []
+    for br in BLOCK_ROWS:
+        cands.append({"schedule": "onepass", "block_rows": br})
+        if br >= info.R:
+            break
+    for br, bc in STREAM_TILES:
+        cands.append({"schedule": "streaming", "block_rows": br,
+                      "block_cols": bc})
+    return cands
+
+
+def _time_callable(fn, args, *, warmup: int = 1, iters: int = 3) -> float:
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tune_pattern(graph: Graph, pattern: frozenset[int], *,
+                 hw: Hardware = V5E, interpret: bool = True,
+                 ctx=None) -> dict | None:
+    """Measure candidate schedules for one pattern; None -> keep analytic.
+
+    Returns the winning ``{"schedule", "block_rows"[, "block_cols"]}``
+    override, or None when the pattern has no row view / nothing beats
+    running the sweep (e.g. every candidate failed to emit).
+    """
+    if ctx is not None:
+        info = ctx.info(pattern)
+    else:
+        from .rowspec import analyze
+
+        info = analyze(graph, pattern)
+    if info is None or not pattern_emittable(graph, pattern, info=info):
+        return None
+
+    rng = np.random.default_rng(0)
+    best_t, best_over = float("inf"), None
+    for over in _candidate_overrides(info):
+        try:
+            em = emit_pattern(graph, pattern, hw=hw, interpret=interpret,
+                              ctx=ctx, schedule_override=over)
+            if em.estimate.schedule != over["schedule"]:
+                continue  # override infeasible; emitter fell back
+            import jax.numpy as jnp
+
+            args = [jnp.asarray(rng.standard_normal(graph.node(i).spec.shape),
+                                dtype=graph.node(i).spec.dtype)
+                    for i in em.ext_ids]
+            t = _time_callable(em.fn, args)
+        except Exception:  # noqa: BLE001 - a failing candidate just loses
+            continue
+        if t < best_t:
+            best_t, best_over = t, over
+    return best_over

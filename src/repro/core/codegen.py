@@ -81,9 +81,13 @@ EMITTABLE_PRIMS = (set(_OPS) | set(_REDUCES)
                       "stop_gradient", "const"})
 
 
-def pattern_emittable(graph: Graph, pattern: frozenset[int]) -> bool:
-    """Can the Pallas emitter stitch this pattern?"""
-    if analyze(graph, pattern) is None:
+def pattern_emittable(graph: Graph, pattern: frozenset[int],
+                      info: "RowInfo | None" = ...) -> bool:
+    """Can the Pallas emitter stitch this pattern?  Pass a precomputed
+    ``analyze`` result via ``info`` to skip re-running the inference."""
+    if info is ...:
+        info = analyze(graph, pattern)
+    if info is None:
         return False
     return all(graph.node(n).prim in EMITTABLE_PRIMS for n in pattern)
 
@@ -119,16 +123,57 @@ class Emitted:
     scratch_naive_bytes: int
 
 
+def _override_estimate(graph: Graph, pattern: frozenset[int], info,
+                       override: dict, hw: Hardware,
+                       ctx=None) -> KernelEstimate | None:
+    """Re-price a cached/tuned schedule choice; None if it doesn't apply."""
+    from .cost_model import estimate_onepass, estimate_packed, \
+        estimate_streaming
+
+    sched = override.get("schedule")
+    if sched == "packed":
+        return estimate_packed(graph, pattern, hw, ctx=ctx)
+    if info is None:
+        return None
+    if sched == "onepass":
+        est = estimate_onepass(graph, pattern, info,
+                               int(override.get("block_rows", 8)), hw,
+                               ctx=ctx)
+        return est if est.feasible else None
+    if sched == "streaming":
+        est = estimate_streaming(graph, pattern, info,
+                                 int(override.get("block_rows", 8)),
+                                 int(override.get("block_cols", 2048)), hw,
+                                 ctx=ctx)
+        return est if est.feasible else None
+    return None
+
+
 def emit_pattern(graph: Graph, pattern: frozenset[int], *,
                  hw: Hardware = V5E, interpret: bool = True,
-                 force_packed: bool = False) -> Emitted:
-    est = best_estimate(graph, pattern, hw)
-    ext_all = graph.pattern_inputs(pattern)
+                 force_packed: bool = False, ctx=None,
+                 schedule_override: dict | None = None) -> Emitted:
+    """Compile one pattern.  ``schedule_override`` (from the persistent
+    plan cache or the measured autotuner) pins {schedule, block_rows,
+    block_cols} instead of re-running the analytic sweep."""
+    info = ctx.info(pattern) if ctx is not None else analyze(graph, pattern)
+    est = None
+    if schedule_override is not None:
+        est = _override_estimate(graph, pattern, info, schedule_override,
+                                 hw, ctx=ctx)
+    override_applied = est is not None
+    if est is None:
+        est = (ctx.best(pattern) if ctx is not None
+               else best_estimate(graph, pattern, hw))
+    if ctx is not None:
+        b = ctx.bounds(pattern)
+        ext_all, out_ids = list(b.inputs), list(b.outputs)
+    else:
+        ext_all = graph.pattern_inputs(pattern)
+        out_ids = graph.pattern_outputs(pattern)
     ext_ids = [i for i in ext_all if graph.node(i).kind is not OpKind.CONST]
-    out_ids = graph.pattern_outputs(pattern)
 
-    if not force_packed and pattern_emittable(graph, pattern):
-        info = analyze(graph, pattern)
+    if not force_packed and pattern_emittable(graph, pattern, info=info):
         scratch = plan_scratch(graph, pattern, info)
         if est.schedule == "onepass":
             fn = _emit_pallas(graph, pattern, info, est.block_rows, ext_ids,
@@ -136,16 +181,18 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
             return Emitted(fn, "pallas", est, ext_ids, out_ids,
                            scratch.total_bytes, scratch.naive_bytes)
         if est.schedule == "streaming":
+            bc = (int(schedule_override.get("block_cols", 2048))
+                  if override_applied else 2048)
             fn = _emit_pallas_streaming(graph, pattern, info,
                                         est.block_rows, ext_ids, out_ids,
-                                        interpret=interpret)
+                                        interpret=interpret, block_cols=bc)
             return Emitted(fn, "pallas", est, ext_ids, out_ids,
                            scratch.total_bytes, scratch.naive_bytes)
 
     fn = _emit_packed(graph, pattern, ext_ids, out_ids)
     if est.schedule in ("onepass", "streaming"):  # emitter gap: packed
         from .cost_model import estimate_packed
-        est = estimate_packed(graph, pattern, hw)
+        est = estimate_packed(graph, pattern, hw, ctx=ctx)
     return Emitted(fn, "packed", est, ext_ids, out_ids, 0, 0)
 
 

@@ -76,15 +76,20 @@ class KernelEstimate:
 
 
 def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
-                     block_rows: int, hw: Hardware = V5E) -> KernelEstimate:
+                     block_rows: int, hw: Hardware = V5E,
+                     ctx=None) -> KernelEstimate:
     """Latency of the stitched one-pass row kernel at a given block size."""
     R, C = info.R, info.C
     Cp = _pad(C, 128)
     br = min(block_rows, R)
     n_steps = math.ceil(R / br)
 
-    ext_in = graph.pattern_inputs(pattern)
-    outs = graph.pattern_outputs(pattern)
+    if ctx is not None:
+        b = ctx.bounds(pattern)
+        ext_in, outs = b.inputs, b.outputs
+    else:
+        ext_in = graph.pattern_inputs(pattern)
+        outs = graph.pattern_outputs(pattern)
 
     def tile_bytes(nid: int) -> int:
         node = graph.node(nid)
@@ -113,24 +118,25 @@ def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
             per_step = br * Cp  # reduce reads a FULL operand tile
         ops += vpu_cost(node.prim) * per_step
 
-    scratch = plan_scratch(graph, pattern, info)
-    scratch_bytes = scratch.total_bytes * br + sum(
-        role_bytes_per_row(Role.FULL, Cp, 4) // Cp * 0  # COL params live whole-kernel
-        for _ in ())
+    scratch = (ctx.scratch(pattern, info) if ctx is not None
+               else plan_scratch(graph, pattern, info))
+    scratch_bytes = scratch.total_bytes * br
     col_bytes = sum(Cp * graph.node(i).spec.itemsize for i in ext_in
                     if info.roles.get(i) is Role.COL)
     working = step_hbm + scratch_bytes + col_bytes
 
     t_hbm = step_hbm / hw.hbm_bw
     t_vpu = ops / hw.vpu_ops
-    fits = 2 * working <= hw.vmem_budget * 2  # buffer pair within full VMEM
-    overlap = 2 * working <= hw.vmem_bytes
-    t_step = max(t_hbm, t_vpu) if overlap else (t_hbm + t_vpu)
+    # one feasibility check: the in/out buffer pair (2x the per-step
+    # working set) must fit VMEM; the same bound decides HBM/VPU overlap.
+    double_buffer_fits = 2 * working <= hw.vmem_bytes
+    t_step = max(t_hbm, t_vpu) if double_buffer_fits else (t_hbm + t_vpu)
 
-    total_hbm = (graph.pattern_hbm_bytes(pattern))
+    total_hbm = (ctx.hbm_bytes(pattern) if ctx is not None
+                 else graph.pattern_hbm_bytes(pattern))
     lat = n_steps * t_step + hw.launch_s + hw.hbm_latency_s
     return KernelEstimate("onepass", br, lat, total_hbm, ops * n_steps,
-                          int(working), n_steps, fits)
+                          int(working), n_steps, double_buffer_fits)
 
 
 def reduce_levels(graph: Graph, pattern: frozenset[int]) -> dict[int, int]:
@@ -151,7 +157,7 @@ def reduce_levels(graph: Graph, pattern: frozenset[int]) -> dict[int, int]:
 
 def estimate_streaming(graph: Graph, pattern: frozenset[int], info: RowInfo,
                        block_rows: int, block_cols: int,
-                       hw: Hardware = V5E) -> KernelEstimate:
+                       hw: Hardware = V5E, ctx=None) -> KernelEstimate:
     """Streaming multi-phase schedule (warp-composition analogue):
     column-tiled passes with ROW accumulators staged in VMEM scratch;
     FULL inputs are re-read (and low-level nodes re-computed) once per
@@ -163,8 +169,12 @@ def estimate_streaming(graph: Graph, pattern: frozenset[int], info: RowInfo,
     n_col_tiles = math.ceil(C / bc)
     n_steps = math.ceil(R / br) * phases * n_col_tiles
 
-    ext_in = graph.pattern_inputs(pattern)
-    outs = graph.pattern_outputs(pattern)
+    if ctx is not None:
+        b = ctx.bounds(pattern)
+        ext_in, outs = b.inputs, b.outputs
+    else:
+        ext_in = graph.pattern_inputs(pattern)
+        outs = graph.pattern_outputs(pattern)
     full_in = sum(br * bc * graph.node(i).spec.itemsize for i in ext_in
                   if info.roles.get(i) is Role.FULL)
     other_in = sum(graph.node(i).spec.itemsize * br for i in ext_in
@@ -190,13 +200,14 @@ def estimate_streaming(graph: Graph, pattern: frozenset[int], info: RowInfo,
         else (step_hbm / hw.hbm_bw + ops / hw.vpu_ops)
     lat = n_steps * t_step + hw.launch_s + hw.hbm_latency_s
     feasible = working <= hw.vmem_budget
-    return KernelEstimate("streaming", br, lat,
-                          graph.pattern_hbm_bytes(pattern) * phases,
+    hbm = (ctx.hbm_bytes(pattern) if ctx is not None
+           else graph.pattern_hbm_bytes(pattern))
+    return KernelEstimate("streaming", br, lat, hbm * phases,
                           ops * n_steps, int(working), n_steps, feasible)
 
 
 def estimate_packed(graph: Graph, pattern: frozenset[int],
-                    hw: Hardware = V5E) -> KernelEstimate:
+                    hw: Hardware = V5E, ctx=None) -> KernelEstimate:
     """Kernel-packing fallback: one launch, XLA-style loop fusion inside.
 
     Intermediates consumed by *foreign-parallelism* members still spill,
@@ -204,7 +215,11 @@ def estimate_packed(graph: Graph, pattern: frozenset[int],
     We charge full HBM for external IO plus half of the internal bytes
     (the paper's thread-composition keeps same-index chains in registers).
     """
-    hbm = graph.pattern_hbm_bytes(pattern) + graph.internal_bytes(pattern) // 2
+    if ctx is not None:
+        hbm = ctx.hbm_bytes(pattern) + ctx.internal_bytes(pattern) // 2
+    else:
+        hbm = (graph.pattern_hbm_bytes(pattern)
+               + graph.internal_bytes(pattern) // 2)
     ops = float(graph.subgraph_flops(pattern))
     t = max(hbm / hw.hbm_bw, ops / hw.vpu_ops) + hw.launch_s + hw.hbm_latency_s
     return KernelEstimate("packed", 0, t, hbm, ops, 0, 1, True)
@@ -224,21 +239,26 @@ def estimate_unfused(graph: Graph, pattern: frozenset[int],
     return KernelEstimate("unfused", 0, t, hbm, ops, 0, n_kernels, True)
 
 
+#: Streaming (block_rows, block_cols) tile candidates the sweep tries.
+STREAM_TILES = ((8, 512), (8, 2048), (64, 2048))
+
+
 def best_estimate(graph: Graph, pattern: frozenset[int],
-                  hw: Hardware = V5E) -> KernelEstimate:
+                  hw: Hardware = V5E, ctx=None) -> KernelEstimate:
     """Enumerate schedules x launch dims, return the latency-optimal one."""
-    cands = [estimate_packed(graph, pattern, hw)]
-    info = analyze(graph, pattern)
+    cands = [estimate_packed(graph, pattern, hw, ctx=ctx)]
+    info = ctx.info(pattern) if ctx is not None else analyze(graph, pattern)
     if info is not None:
         for br in BLOCK_ROWS:
-            est = estimate_onepass(graph, pattern, info, br, hw)
+            est = estimate_onepass(graph, pattern, info, br, hw, ctx=ctx)
             if est.feasible:
                 cands.append(est)
             if br >= info.R:
                 break
         # streaming (warp-composition analogue) for long rows
-        for br, bc in ((8, 512), (8, 2048), (64, 2048)):
-            est = estimate_streaming(graph, pattern, info, br, bc, hw)
+        for br, bc in STREAM_TILES:
+            est = estimate_streaming(graph, pattern, info, br, bc, hw,
+                                     ctx=ctx)
             if est.feasible:
                 cands.append(est)
     return min(cands, key=lambda e: e.latency_s)
@@ -248,21 +268,30 @@ def best_estimate(graph: Graph, pattern: frozenset[int],
 # delta-evaluator
 # ---------------------------------------------------------------------------
 def delta_evaluator(graph: Graph, pattern: frozenset[int],
-                    hw: Hardware = V5E) -> float:
-    """Score f(P) = T_reduced_mem + T_reduced_calls - T_penalty  (§5.4)."""
+                    hw: Hardware = V5E, ctx=None) -> float:
+    """Score f(P) = T_reduced_mem + T_reduced_calls - T_penalty  (§5.4).
+
+    With a ``CostContext`` the boundary sets and rowspec analysis come
+    from the per-graph memo instead of being rebuilt per call.
+    """
     if len(pattern) == 1:
         return 0.0
 
     # T_reduced_mem: internal tensors stop round-tripping HBM (1 write +
     # one read per consumer), and shared external inputs are read once.
     saved_bytes = 0
-    outset = set(graph.outputs)
-    for nid in pattern:
-        node = graph.node(nid)
-        cons = graph.consumers(nid)
-        if nid not in outset and cons and all(c in pattern for c in cons):
-            saved_bytes += node.nbytes * (1 + len(cons))
-    for ext in graph.pattern_inputs(pattern):
+    if ctx is not None:
+        b = ctx.bounds(pattern)
+        internal_ids, ext_ids = b.internal, b.inputs
+    else:
+        outset = set(graph.outputs)
+        internal_ids = [nid for nid in pattern
+                        if nid not in outset and graph.consumers(nid)
+                        and all(c in pattern for c in graph.consumers(nid))]
+        ext_ids = graph.pattern_inputs(pattern)
+    for nid in internal_ids:
+        saved_bytes += graph.node(nid).nbytes * (1 + len(graph.consumers(nid)))
+    for ext in ext_ids:
         n_in = sum(1 for c in graph.consumers(ext) if c in pattern)
         if n_in > 1:
             saved_bytes += graph.node(ext).nbytes * (n_in - 1)
@@ -278,7 +307,7 @@ def delta_evaluator(graph: Graph, pattern: frozenset[int],
     # no lifetime analysis).  Here: max per-row scratch w/o sharing, fixed
     # 16-value live set; VMEM overflow and no-row-view both penalize.
     t_penalty = 0.0
-    info = analyze(graph, pattern)
+    info = ctx.info(pattern) if ctx is not None else analyze(graph, pattern)
     if info is None:
         # not stitchable -> only packing benefits remain; forfeit most of
         # the reuse saving but keep call reduction.

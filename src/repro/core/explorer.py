@@ -17,18 +17,17 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass
 
-from .cost_model import Hardware, V5E, delta_evaluator
+from .costctx import CostContext
+from .cost_model import Hardware, V5E
 from .ir import FUSIBLE_KINDS, Graph, OpKind, Pattern
 
 TOP_K = 3          # paper: top-3 candidate patterns per vertex
 MAX_GROUP = 2      # paper: recursive split of consumers into groups
 MAX_PATTERN = 96   # guardrail on pattern size (VMEM planning stays sane)
 
-
-def _valid(graph: Graph, members: frozenset[int]) -> bool:
-    if len(members) > MAX_PATTERN:
-        return False
-    return graph.is_convex(members)
+#: Number of ``explore()`` runs in this process (plan-cache tests read it
+#: to prove a cache hit skipped exploration entirely).
+EXPLORE_RUNS = 0
 
 
 def _fusible_consumers(graph: Graph, nid: int) -> list[int]:
@@ -39,20 +38,22 @@ def _fusible_consumers(graph: Graph, nid: int) -> list[int]:
 class FusionExplorer:
     """Generates candidate fusion patterns for every fusible vertex."""
 
-    def __init__(self, graph: Graph, hw: Hardware = V5E, top_k: int = TOP_K):
+    def __init__(self, graph: Graph, hw: Hardware = V5E, top_k: int = TOP_K,
+                 ctx: CostContext | None = None):
         self.graph = graph
         self.hw = hw
         self.top_k = top_k
+        self.ctx = ctx if ctx is not None else CostContext(graph, hw)
         self.candidates: dict[int, list[Pattern]] = {}
-        self._score_cache: dict[frozenset[int], float] = {}
 
-    # -- scoring ------------------------------------------------------------
+    # -- scoring / validity ---------------------------------------------------
     def score(self, members: frozenset[int]) -> float:
-        got = self._score_cache.get(members)
-        if got is None:
-            got = delta_evaluator(self.graph, members, self.hw)
-            self._score_cache[members] = got
-        return got
+        return self.ctx.score(members)
+
+    def _valid(self, members: frozenset[int]) -> bool:
+        if len(members) > MAX_PATTERN:
+            return False
+        return self.ctx.is_convex(members)
 
     # -- PatternReduction -----------------------------------------------------
     def _reduce_consumer_group(self, vid: int,
@@ -66,8 +67,8 @@ class FusionExplorer:
             merged: list[Pattern] = []
             for a in left:
                 for b in right:
-                    members = a.members | b.members
-                    if _valid(self.graph, members):
+                    members = self.ctx.union(a.members, b.members)
+                    if self._valid(members):
                         merged.append(Pattern(members, self.score(members)))
             merged.extend(left)
             merged.extend(right)
@@ -86,10 +87,10 @@ class FusionExplorer:
             members = base
             for m in combo:
                 if m is not None:
-                    members = members | m
+                    members = self.ctx.union(members, m)
             if len(members) == 1:
                 continue
-            if _valid(self.graph, members):
+            if self._valid(members):
                 out.append(Pattern(members, self.score(members)))
         return self._topk(out)
 
@@ -103,6 +104,8 @@ class FusionExplorer:
     # -- main entry -----------------------------------------------------------
     def explore(self) -> dict[int, list[Pattern]]:
         """Candidate patterns per vertex (vertex = pattern producer)."""
+        global EXPLORE_RUNS
+        EXPLORE_RUNS += 1
         order = self.graph.topo_order()
         for vid in reversed(order):  # post-order: last vertex first (§5.2)
             node = self.graph.node(vid)

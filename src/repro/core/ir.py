@@ -13,6 +13,7 @@ memory-intensive kinds; GEMM/conv and data-dependent indexing ops are
 from __future__ import annotations
 
 import enum
+import functools
 import math
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Sequence
@@ -50,17 +51,23 @@ class TensorSpec:
     shape: tuple[int, ...]
     dtype: str  # canonical numpy dtype name, e.g. "float32", "bfloat16"
 
-    @property
+    # cached: the planner reads these tens of thousands of times per graph
+    # (cached_property writes the instance __dict__ directly, which frozen
+    # dataclasses permit; equality/hash still use the fields only).
+    @functools.cached_property
     def size(self) -> int:
-        return int(np.prod(self.shape)) if self.shape else 1
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n
 
-    @property
+    @functools.cached_property
     def itemsize(self) -> int:
         if self.dtype == "bfloat16":
             return 2
         return np.dtype(self.dtype).itemsize
 
-    @property
+    @functools.cached_property
     def nbytes(self) -> int:
         return self.size * self.itemsize
 
@@ -116,11 +123,13 @@ class Graph:
         self.inputs: list[int] = []
         self.outputs: list[int] = []
         self._consumers: dict[int, list[int]] | None = None
+        self._reach: tuple[dict[int, int], dict[int, int]] | None = None
 
     # -- construction ------------------------------------------------------
     def add(self, node: Node) -> int:
         self.nodes[node.nid] = node
         self._consumers = None
+        self._reach = None
         return node.nid
 
     # -- queries -----------------------------------------------------------
@@ -150,14 +159,54 @@ class Graph:
         return [n.nid for n in self.nodes.values() if n.kind in FUSIBLE_KINDS]
 
     # -- pattern validity ---------------------------------------------------
+    def reachability(self) -> tuple[dict[int, int], dict[int, int]]:
+        """Per-node (descendants, ancestors) bitmasks, bit i = node id i.
+
+        Computed once per graph in O(V·E/64) big-int word ops and
+        invalidated on ``add``; ``is_convex`` then becomes an
+        O(|P|·V/64) mask test instead of a per-call BFS.
+        """
+        if self._reach is None:
+            ids = sorted(self.nodes)
+            desc: dict[int, int] = {}
+            for nid in reversed(ids):
+                m = 0
+                for c in self.consumers(nid):
+                    m |= (1 << c) | desc[c]
+                desc[nid] = m
+            anc: dict[int, int] = {}
+            for nid in ids:
+                m = 0
+                for i in self.nodes[nid].inputs:
+                    m |= (1 << i) | anc[i]
+                anc[nid] = m
+            self._reach = (desc, anc)
+        return self._reach
+
     def is_convex(self, pattern: frozenset[int]) -> bool:
         """True iff fusing ``pattern`` introduces no cyclic dependence.
 
-        Paper §5.2 / Fig. 6: a pattern is invalid if a path exits the pattern
-        and re-enters it.  Equivalent check: no node *outside* the pattern
-        both (transitively) depends on a pattern member and feeds a pattern
-        member.  We run a forward reachability sweep between the min and max
-        node id of the pattern (node ids are topo-ordered).
+        Paper §5.2 / Fig. 6: a pattern is invalid if a path exits the
+        pattern and re-enters it.  Equivalent check: no node *outside* the
+        pattern is both a descendant of a member and an ancestor of a
+        member; with the precomputed reachability bitmasks that is one
+        AND-NOT over V-bit ints.
+        """
+        if len(pattern) <= 1:
+            return True
+        desc, anc = self.reachability()
+        pmask = d = a = 0
+        for nid in pattern:
+            pmask |= 1 << nid
+            d |= desc[nid]
+            a |= anc[nid]
+        return not (d & a & ~pmask)
+
+    def is_convex_bfs(self, pattern: frozenset[int]) -> bool:
+        """Reference BFS convexity check (the pre-bitset implementation).
+
+        Kept for the plan-time benchmark's seed-mode comparison and as a
+        cross-check oracle in tests.
         """
         if len(pattern) <= 1:
             return True

@@ -1,0 +1,166 @@
+"""Persistent fusion-plan / tuning cache (tune once, run many).
+
+The paper's production story (and its predecessor work on JIT tuning
+cost) amortizes plan search across runs: a deployed model compiles its
+stitched kernels once and every later process reuses the choice.  This
+module implements that with a content-addressed on-disk cache:
+
+  * ``graph_signature`` canonicalizes a traced graph (topology + prims +
+    shapes/dtypes + primitive params) together with the hardware model
+    and the planner knobs into a sha256 key.  Constant *values* are
+    excluded on purpose -- plans are structural, so two graphs differing
+    only in weights share one plan.
+  * ``PlanCache`` stores one JSON file per signature under a root
+    directory (``$REPRO_PLAN_CACHE``), written atomically so concurrent
+    processes can share a cache dir.
+  * Entries record the chosen patterns *and* their tuned schedules
+    (onepass/streaming/packed + block rows/cols), so a cache hit skips
+    both exploration and the latency sweep.
+
+Enable by exporting ``REPRO_PLAN_CACHE=/path/to/dir`` (or passing
+``plan_cache=`` to ``stitched_jit``).  A stale or corrupt entry never
+breaks compilation: validation falls back to re-planning.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+from .ir import FUSIBLE_KINDS, FusionPlan, Graph, Pattern
+
+#: Environment variable holding the cache root directory.
+ENV_DIR = "REPRO_PLAN_CACHE"
+
+#: Bump when the entry layout or planner semantics change incompatibly.
+FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# canonical graph signature
+# ---------------------------------------------------------------------------
+def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
+    """Canonical sha256 of (topology, prims, shapes/dtypes, params, hw,
+    planner configuration)."""
+    from .explorer import MAX_GROUP, MAX_PATTERN, TOP_K
+    from .planner import BEAM_WIDTH
+
+    h = hashlib.sha256()
+
+    def w(*xs) -> None:
+        h.update(repr(xs).encode())
+        h.update(b";")
+
+    w("format", FORMAT_VERSION)
+    w("hw", hw.peak_bf16_flops, hw.hbm_bw, hw.vpu_ops, hw.vmem_bytes,
+      hw.launch_s, hw.hbm_latency_s)
+    w("knobs", TOP_K, MAX_GROUP, MAX_PATTERN, BEAM_WIDTH, remote_fusion)
+    w("io", tuple(graph.inputs), tuple(graph.outputs))
+    for nid in graph.topo_order():
+        n = graph.node(nid)
+        params = tuple(sorted(
+            (k, repr(v)) for k, v in n.params.items()
+            if not k.startswith("_")))  # skip live jax primitive handles
+        w(nid, n.prim, n.kind.value, n.inputs, n.spec.shape, n.spec.dtype,
+          params)
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# entry <-> plan
+# ---------------------------------------------------------------------------
+def plan_to_entry(plan: FusionPlan, schedules: list[dict],
+                  signature: str) -> dict:
+    """Serialize a chosen plan + per-pattern schedule picks."""
+    return {
+        "format": FORMAT_VERSION,
+        "signature": signature,
+        "patterns": [
+            {"members": sorted(pat.members), **sched}
+            for pat, sched in zip(plan.patterns, schedules)
+        ],
+    }
+
+
+def entry_to_plan(entry: dict, graph: Graph
+                  ) -> tuple[FusionPlan, list[dict]] | None:
+    """Reconstruct (plan, per-pattern schedule overrides); None if stale.
+
+    Validates against the live graph (membership, fusibility,
+    disjointness, convexity) so a corrupt or hand-edited entry degrades
+    to a re-plan instead of a miscompile.
+    """
+    if not isinstance(entry, dict) or entry.get("format") != FORMAT_VERSION:
+        return None
+    patterns: list[Pattern] = []
+    overrides: list[dict] = []
+    seen: set[int] = set()
+    for rec in entry.get("patterns", ()):
+        try:
+            members = frozenset(int(m) for m in rec["members"])
+        except (KeyError, TypeError, ValueError):
+            return None
+        if not members or not members.isdisjoint(seen):
+            return None
+        for nid in members:
+            node = graph.nodes.get(nid)
+            if node is None or node.kind not in FUSIBLE_KINDS:
+                return None
+        if not graph.is_convex(members):
+            return None
+        seen |= members
+        patterns.append(Pattern(members, 0.0))
+        overrides.append(_sanitize_override(rec))
+    return FusionPlan(patterns), overrides
+
+
+def _sanitize_override(rec: dict) -> dict:
+    """Keep only well-typed schedule fields; a malformed override must
+    degrade to the analytic sweep, not crash emission."""
+    if rec.get("schedule") not in ("onepass", "streaming", "packed"):
+        return {}
+    over = {"schedule": rec["schedule"]}
+    for k in ("block_rows", "block_cols"):
+        v = rec.get(k)
+        if isinstance(v, int) and not isinstance(v, bool) and v > 0:
+            over[k] = v
+    return over
+
+
+# ---------------------------------------------------------------------------
+# on-disk store
+# ---------------------------------------------------------------------------
+class PlanCache:
+    """One JSON file per graph signature under ``root``."""
+
+    def __init__(self, root: str):
+        self.root = root
+
+    @classmethod
+    def from_env(cls) -> "PlanCache | None":
+        root = os.environ.get(ENV_DIR)
+        return cls(root) if root else None
+
+    def _path(self, signature: str) -> str:
+        return os.path.join(self.root, f"{signature}.json")
+
+    def load(self, signature: str) -> dict | None:
+        try:
+            with open(self._path(signature)) as f:
+                entry = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+        if not isinstance(entry, dict) or entry.get("signature") != signature:
+            return None
+        return entry
+
+    def store(self, signature: str, entry: dict) -> None:
+        try:
+            os.makedirs(self.root, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(entry, f, indent=1)
+            os.replace(tmp, self._path(signature))  # atomic on POSIX
+        except OSError:
+            pass  # a read-only cache dir must never break compilation

@@ -5,6 +5,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .costctx import CostContext
 from .cost_model import Hardware, V5E, best_estimate
 from .explorer import FusionExplorer
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, Pattern
@@ -63,7 +64,8 @@ def _leftover_singletons(graph: Graph, plan: FusionPlan) -> list[int]:
 
 
 def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
-                  max_rounds: int = 4) -> FusionPlan:
+                  max_rounds: int = 4,
+                  ctx: CostContext | None = None) -> FusionPlan:
     """Greedy pairwise pattern merging after beam search.
 
     PatternReduction grows patterns from a producer toward consumers, so a
@@ -74,7 +76,8 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
     (the union also saves a launch, folded into the score).  Leftover
     singletons adjacent to a pattern are absorbed the same way.
     """
-    from .cost_model import delta_evaluator
+    if ctx is None:
+        ctx = CostContext(graph, hw)
 
     pats = [p.members for p in plan.patterns]
     for _ in range(max_rounds):
@@ -88,10 +91,9 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
                                   for inp in graph.node(nid).inputs))
                 if not touches:
                     continue
-                union = members | {nid}
-                if graph.is_convex(union) and \
-                        delta_evaluator(graph, union, hw) >= \
-                        delta_evaluator(graph, members, hw):
+                union = ctx.union(members, frozenset({nid}))
+                if ctx.is_convex(union) and \
+                        ctx.score(union) >= ctx.score(members):
                     pats[i] = union
                     changed = True
                     break
@@ -99,31 +101,29 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
         i = 0
         while i < len(pats):
             j = i + 1
-            merged = False
             while j < len(pats):
-                union = pats[i] | pats[j]
-                if graph.is_convex(union):
-                    s_union = delta_evaluator(graph, union, hw)
-                    s_parts = (delta_evaluator(graph, pats[i], hw)
-                               + delta_evaluator(graph, pats[j], hw))
+                union = ctx.union(pats[i], pats[j])
+                if ctx.is_convex(union):
+                    s_union = ctx.score(union)
+                    s_parts = ctx.score(pats[i]) + ctx.score(pats[j])
                     if s_union >= s_parts:
                         pats[i] = union
                         pats.pop(j)
-                        changed = merged = True
+                        changed = True
                         continue
                 j += 1
             i += 1
         if not changed:
             break
 
-    out = FusionPlan([Pattern(m, delta_evaluator(graph, m, hw))
-                      for m in pats])
+    out = FusionPlan([Pattern(m, ctx.score(m)) for m in pats])
     out.total_score = sum(p.score for p in out.patterns)
     return out
 
 
 def remote_fusion(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
-                  max_pack: int = 8) -> FusionPlan:
+                  max_pack: int = 8,
+                  ctx: CostContext | None = None) -> FusionPlan:
     """Pack leftover non-adjacent kernels to cut launch count (paper Fig. 5).
 
     The paper introduces a virtual producer ``h`` over all pattern roots and
@@ -131,12 +131,14 @@ def remote_fusion(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
     patterns.  We realize the same effect directly: leftover singletons that
     form a convex union are packed greedily into launch groups.
     """
+    if ctx is None:
+        ctx = CostContext(graph, hw)
     singles = _leftover_singletons(graph, plan)
     packed: list[Pattern] = []
     bucket: list[int] = []
     for nid in singles:
         trial = frozenset(bucket + [nid])
-        if len(trial) <= max_pack and graph.is_convex(trial):
+        if len(trial) <= max_pack and ctx.is_convex(trial):
             bucket.append(nid)
         else:
             if len(bucket) > 1:
@@ -150,7 +152,8 @@ def remote_fusion(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
 
 
 def plan_latency(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
-                 composition: str = "auto") -> float:
+                 composition: str = "auto",
+                 ctx: CostContext | None = None) -> float:
     """Accurate plan cost: latency-evaluator over patterns + leftovers.
 
     ``composition="thread"`` restricts every pattern to the packed
@@ -161,28 +164,41 @@ def plan_latency(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
     total = 0.0
     for pat in plan.patterns:
         if composition == "thread":
-            total += estimate_packed(graph, pat.members, hw).latency_s
+            total += estimate_packed(graph, pat.members, hw,
+                                     ctx=ctx).latency_s
+        elif ctx is not None:
+            total += ctx.best(pat.members).latency_s
         else:
             total += best_estimate(graph, pat.members, hw).latency_s
     for nid in _leftover_singletons(graph, plan):
-        total += best_estimate(graph, frozenset({nid}), hw).latency_s
+        single = frozenset({nid})
+        total += (ctx.best(single) if ctx is not None
+                  else best_estimate(graph, single, hw)).latency_s
     return total
 
 
 def make_plan(graph: Graph, hw: Hardware = V5E,
-              use_remote_fusion: bool = True) -> FusionPlan:
-    """explore -> beam-search -> latency pick -> remote fusion."""
-    explorer = FusionExplorer(graph, hw)
+              use_remote_fusion: bool = True,
+              ctx: CostContext | None = None) -> FusionPlan:
+    """explore -> beam-search -> latency pick -> remote fusion.
+
+    All stages share one ``CostContext``, so every pattern's rowspec
+    analysis, boundary sets, delta score and latency estimate are
+    computed at most once per graph.
+    """
+    if ctx is None:
+        ctx = CostContext(graph, hw)
+    explorer = FusionExplorer(graph, hw, ctx=ctx)
     candidates = explorer.explore()
     plans = beam_search(graph, candidates)
     if not plans:
         plans = [FusionPlan()]
-    best = min(plans, key=lambda p: plan_latency(graph, p, hw))
+    best = min(plans, key=lambda p: plan_latency(graph, p, hw, ctx=ctx))
     assert best.validate_disjoint(), "planner produced overlapping patterns"
-    best = coalesce_plan(graph, best, hw)
+    best = coalesce_plan(graph, best, hw, ctx=ctx)
     assert best.validate_disjoint()
     if use_remote_fusion:
-        best = remote_fusion(graph, best, hw)
+        best = remote_fusion(graph, best, hw, ctx=ctx)
         assert best.validate_disjoint()
     return best
 
@@ -258,7 +274,8 @@ class PlanStats:
 
 
 def plan_stats(graph: Graph, plan: FusionPlan,
-               composition: str = "auto") -> PlanStats:
+               composition: str = "auto",
+               ctx: CostContext | None = None) -> PlanStats:
     """Plan metrics.  ``composition`` sets the reuse accounting:
       "auto"   -- per-pattern best schedule (block composition when the
                   row view exists, thread-composition packing otherwise),
@@ -279,6 +296,8 @@ def plan_stats(graph: Graph, plan: FusionPlan,
         if composition == "thread":
             hbm_st += (graph.pattern_hbm_bytes(pat.members)
                        + graph.internal_bytes(pat.members) // 2)
+        elif ctx is not None:
+            hbm_st += ctx.best(pat.members).hbm_bytes
         else:
             hbm_st += best_estimate(graph, pat.members).hbm_bytes
     for nid in leftovers + opaque:

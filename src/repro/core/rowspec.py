@@ -48,21 +48,36 @@ class RowInfo:
 
 
 def _classify_shape(shape: tuple[int, ...], R: int, C: int) -> Role | None:
-    size = int(np.prod(shape)) if shape else 1
+    size = 1
+    for d in shape:
+        size *= d
     if size == 1:
         return Role.SCALAR
     if size == R * C and shape and shape[-1] == C:
         return Role.FULL
-    if size == R and (not shape or shape[-1] == 1 or int(np.prod(shape)) == R):
+    if size == R:
         return Role.ROW
     if size == C and shape and shape[-1] == C:
         return Role.COL
     return None
 
 
-def analyze(graph: Graph, pattern: frozenset[int]) -> RowInfo | None:
-    """Infer the (R, C) row view for ``pattern``, or None if unsupported."""
-    members = [graph.node(n) for n in sorted(pattern)]
+_MISS = object()
+
+
+def analyze(graph: Graph, pattern: frozenset[int], *,
+            ext: "tuple[int, ...] | list[int] | None" = None,
+            role_cache: dict | None = None) -> RowInfo | None:
+    """Infer the (R, C) row view for ``pattern``, or None if unsupported.
+
+    ``ext`` (the pattern's external inputs) and ``role_cache`` (a
+    per-graph ``{(nid, R, C): Role}`` memo) let a ``CostContext`` skip
+    the boundary re-scan and repeated shape classification -- this
+    function runs once per *distinct* candidate pattern, thousands of
+    times per planned graph.
+    """
+    nodes = graph.nodes
+    members = [nodes[n] for n in pattern]
 
     # transposes break the row view; the plan keeps them in packed groups.
     if any(m.kind is OpKind.TRANSPOSE for m in members):
@@ -72,7 +87,7 @@ def analyze(graph: Graph, pattern: frozenset[int]) -> RowInfo | None:
     reduce_nodes = [m for m in members if m.kind is OpKind.REDUCE]
     C = None
     for m in reduce_nodes:
-        op_shape = graph.node(m.inputs[0]).spec.shape
+        op_shape = nodes[m.inputs[0]].spec.shape
         axes = tuple(m.params.get("axes", ()))
         if not op_shape or axes != (len(op_shape) - 1,):
             return None  # only trailing-axis reductions are row-compatible
@@ -98,11 +113,18 @@ def analyze(graph: Graph, pattern: frozenset[int]) -> RowInfo | None:
         return None
 
     # 3. classify every member + external input.
+    if ext is None:
+        ext = graph.pattern_inputs(pattern)
     roles: dict[int, Role] = {}
-    ext = graph.pattern_inputs(pattern)
-    for nid in list(pattern) + ext:
-        node = graph.node(nid)
-        role = _classify_shape(node.spec.shape, R, C)
+    for nid in list(pattern) + list(ext):
+        if role_cache is not None:
+            key = (nid, R, C)
+            role = role_cache.get(key, _MISS)
+            if role is _MISS:
+                role = _classify_shape(nodes[nid].spec.shape, R, C)
+                role_cache[key] = role
+        else:
+            role = _classify_shape(nodes[nid].spec.shape, R, C)
         if role is None:
             return None
         roles[nid] = role
@@ -127,9 +149,9 @@ def analyze(graph: Graph, pattern: frozenset[int]) -> RowInfo | None:
             if roles[m.inputs[0]] != roles[m.nid]:
                 return None
 
-    expensive = [m.nid for m in members if m.kind is OpKind.EXPENSIVE_EW]
+    expensive = sorted(m.nid for m in members if m.kind is OpKind.EXPENSIVE_EW)
     return RowInfo(R=R, C=C, roles=roles,
-                   reduce_nodes=[m.nid for m in reduce_nodes],
+                   reduce_nodes=sorted(m.nid for m in reduce_nodes),
                    expensive_nodes=expensive)
 
 

@@ -3,13 +3,23 @@
 Usage::
 
     fused = stitched_jit(layer_norm)        # trace -> explore -> plan -> emit
-    y = fused(x, gamma, beta)               # runs stitched Pallas kernels
+    y = fused(x, gamma, beta)               # one jitted dispatch per call
 
 The wrapper is a pure JAX-traceable function, so it composes with jit /
 grad / vmap / pjit: stitched kernels appear as pallas_call ops inside a
 larger program, exactly like the paper's fusions live inside an XLA
-module.  Plans are cached per static shape/dtype signature (the paper's
+module.  Plans are cached per static shape/dtype signature in-process
+and, when ``$REPRO_PLAN_CACHE`` (or ``plan_cache=``) points at a
+directory, persistently across processes (the paper's
 tune-once-run-many model; dynamic shapes share its §7.5 limitation).
+
+Dispatch: the whole fusion schedule -- pallas_call patterns, packed
+subgraphs and leftover singleton ops -- is composed into **one**
+``jax.jit``-compiled callable, so a stitched call costs a single Python
+dispatch instead of one Python round-trip per schedule item (the
+per-kernel context-switch overhead the paper eliminates, §2.2).  The
+seed's per-item interpreter survives as ``dispatch="interpret"``: the
+equivalence oracle for tests and a debugging aid.
 """
 from __future__ import annotations
 
@@ -22,8 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from .codegen import Emitted, emit_pattern
+from .costctx import CostContext
 from .cost_model import Hardware, V5E
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind
+from .plan_cache import PlanCache, entry_to_plan, graph_signature, \
+    plan_to_entry
 from .planner import PlanStats, make_plan, plan_stats
 from .tracer import bind_node, trace
 
@@ -38,22 +51,38 @@ class StitchReport:
     scratch_naive_bytes: int
     plan_time_s: float
     patterns: list[frozenset] = field(default_factory=list)
+    plan_cache_hit: bool = False
+    autotuned: bool = False
+    signature: str = ""
+    dispatch: str = "single"
 
 
 class _Compiled:
-    """One traced+planned+emitted instance for a fixed shape signature."""
+    """One traced+planned+emitted instance for a fixed shape signature.
+
+    ``dispatch="single"``: the schedule executor is wrapped in one
+    ``jax.jit``, so it runs in Python once (at trace time) and every
+    later call is a single compiled dispatch.  ``exec_count`` counts
+    Python-level executions of the schedule body -- tests use it to
+    prove single-dispatch behavior.
+    """
 
     def __init__(self, graph: Graph, plan: FusionPlan,
                  emitted: list[Emitted], schedule: list[tuple[str, Any]],
-                 report: StitchReport, out_tree):
+                 report: StitchReport, out_tree, dispatch: str = "single"):
         self.graph = graph
         self.plan = plan
         self.emitted = emitted
         self.schedule = schedule  # [("pattern", Emitted) | ("node", nid)]
         self.report = report
         self.out_tree = out_tree
+        self.dispatch = dispatch
+        self.exec_count = 0
+        self._jitted = jax.jit(self._run_schedule)
 
-    def __call__(self, flat_args):
+    def _run_schedule(self, *flat_args):
+        """Execute the fusion schedule (traceable; jitted for dispatch)."""
+        self.exec_count += 1
         graph = self.graph
         env: dict[int, Any] = dict(zip(graph.inputs, flat_args))
         for kind, item in self.schedule:
@@ -70,8 +99,14 @@ class _Compiled:
                 outs = em.fn(*[env[i] for i in em.ext_ids])
                 for oid, val in zip(em.out_ids, outs):
                     env[oid] = val
-        flat_out = [env[o] for o in graph.outputs]
-        return jax.tree_util.tree_unflatten(self.out_tree, flat_out)
+        return tuple(env[o] for o in graph.outputs)
+
+    def __call__(self, flat_args):
+        if self.dispatch == "single":
+            flat_out = self._jitted(*flat_args)
+        else:
+            flat_out = self._run_schedule(*flat_args)
+        return jax.tree_util.tree_unflatten(self.out_tree, list(flat_out))
 
 
 def _build_schedule(graph: Graph, emitted: list[Emitted]) -> list[tuple[str, Any]]:
@@ -115,16 +150,34 @@ def _build_schedule(graph: Graph, emitted: list[Emitted]) -> list[tuple[str, Any
 
 class StitchedFunction:
     def __init__(self, fn: Callable, *, hw: Hardware = V5E,
-                 interpret: bool = True, use_remote_fusion: bool = True):
+                 interpret: bool = True, use_remote_fusion: bool = True,
+                 dispatch: str = "single", plan_cache: str | None = None,
+                 autotune: bool = False):
+        if dispatch not in ("single", "interpret"):
+            raise ValueError(
+                f"dispatch must be 'single' or 'interpret', got {dispatch!r}")
         self._fn = fn
         self._hw = hw
         self._interpret = interpret
         self._remote = use_remote_fusion
+        self._dispatch = dispatch
+        self._autotune = autotune
+        self._plan_cache = (PlanCache(plan_cache) if plan_cache
+                            else PlanCache.from_env())
         self._cache: dict[tuple, _Compiled] = {}
 
     def _signature(self, flat_args) -> tuple:
         return tuple((tuple(np.shape(a)), str(jnp.result_type(a)))
                      for a in flat_args)
+
+    def _load_cached_plan(self, graph: Graph, sig: str
+                          ) -> tuple[FusionPlan, list[dict]] | None:
+        if self._plan_cache is None:
+            return None
+        entry = self._plan_cache.load(sig)
+        if entry is None:
+            return None
+        return entry_to_plan(entry, graph)
 
     def _compile(self, args, kwargs) -> tuple[_Compiled, Any]:
         flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
@@ -138,17 +191,57 @@ class StitchedFunction:
             return self._fn(*a, **k)
 
         graph = trace(flat_fn, *flat)
-        plan = make_plan(graph, self._hw, use_remote_fusion=self._remote)
+        ctx = CostContext(graph, self._hw)
+        sig = graph_signature(graph, self._hw, remote_fusion=self._remote)
+
+        # persistent cache: an identical graph signature in any process
+        # reuses the stored patterns + tuned schedules and skips
+        # exploration entirely.
+        overrides: list[dict] = []
+        cached = self._load_cached_plan(graph, sig)
+        autotuned = False
+        if cached is not None:
+            plan, overrides = cached
+        else:
+            plan = make_plan(graph, self._hw,
+                             use_remote_fusion=self._remote, ctx=ctx)
+            if self._autotune:
+                from .autotune import autotune_available, tune_pattern
+
+                if autotune_available():
+                    for pat in plan.patterns:
+                        over = tune_pattern(graph, pat.members, hw=self._hw,
+                                            interpret=self._interpret,
+                                            ctx=ctx)
+                        overrides.append(over or {})
+                    autotuned = True
+            if not overrides:
+                overrides = [{} for _ in plan.patterns]
+
         emitted: list[Emitted] = []
-        for pat in plan.patterns:
+        for pat, over in zip(plan.patterns, overrides):
             em = emit_pattern(graph, pat.members, hw=self._hw,
-                              interpret=self._interpret)
+                              interpret=self._interpret, ctx=ctx,
+                              schedule_override=over or None)
             em._members = sorted(pat.members)  # type: ignore[attr-defined]
             emitted.append(em)
         schedule = _build_schedule(graph, emitted)
+
+        if self._plan_cache is not None and cached is None:
+            schedules = []
+            for em, over in zip(emitted, overrides):
+                if over and em.estimate.schedule == over.get("schedule"):
+                    # the emitter honored a tuned override: persist it
+                    # verbatim (keeps streaming block_cols, which the
+                    # analytic KernelEstimate doesn't carry).
+                    schedules.append(dict(over))
+                else:
+                    schedules.append({"schedule": em.estimate.schedule,
+                                      "block_rows": em.estimate.block_rows})
+            self._plan_cache.store(sig, plan_to_entry(plan, schedules, sig))
         plan_time = time.perf_counter() - t0
 
-        stats = plan_stats(graph, plan)
+        stats = plan_stats(graph, plan, ctx=ctx)
         report = StitchReport(
             stats=stats,
             n_pallas=sum(1 for e in emitted if e.kind == "pallas"),
@@ -157,18 +250,28 @@ class StitchedFunction:
             scratch_naive_bytes=sum(e.scratch_naive_bytes for e in emitted),
             plan_time_s=plan_time,
             patterns=[p.members for p in plan.patterns],
+            plan_cache_hit=cached is not None,
+            autotuned=autotuned,
+            signature=sig,
+            dispatch=self._dispatch,
         )
 
         # determine output tree
         out_shape = jax.eval_shape(flat_fn, *flat)
         _, out_tree = jax.tree_util.tree_flatten(out_shape)
-        compiled = _Compiled(graph, plan, emitted, schedule, report, out_tree)
+        compiled = _Compiled(graph, plan, emitted, schedule, report,
+                             out_tree, dispatch=self._dispatch)
         self._cache[key] = compiled
         return compiled, flat
 
     def __call__(self, *args, **kwargs):
         compiled, flat = self._compile(args, kwargs)
         return compiled(flat)
+
+    def compiled(self, *args, **kwargs) -> _Compiled:
+        """The compiled instance for these example args (tests/benchmarks)."""
+        compiled, _ = self._compile(args, kwargs)
+        return compiled
 
     def report(self, *args, **kwargs) -> StitchReport:
         compiled, _ = self._compile(args, kwargs)
@@ -177,8 +280,18 @@ class StitchedFunction:
 
 def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                  use_remote_fusion: bool = True,
-                 differentiable: bool = False) -> Callable:
+                 differentiable: bool = False,
+                 dispatch: str = "single",
+                 plan_cache: str | None = None,
+                 autotune: bool = False) -> Callable:
     """Wrap ``fn`` with the FusionStitching trace->plan->emit pipeline.
+
+    ``dispatch="single"`` (default) lowers the whole plan into one jitted
+    callable; ``dispatch="interpret"`` keeps the per-schedule-item Python
+    interpreter.  ``plan_cache`` points at a persistent plan-cache
+    directory (defaults to ``$REPRO_PLAN_CACHE`` when set).  With
+    ``autotune=True`` and an accelerator present, block schedules are
+    measured instead of modeled (results land in the plan cache).
 
     With ``differentiable=True`` the wrapper carries a ``custom_vjp`` whose
     forward runs the stitched kernels and whose backward re-traces the VJP
@@ -187,7 +300,9 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
     backward graph is just another fusion-planned graph).
     """
     sf = StitchedFunction(fn, hw=hw, interpret=interpret,
-                          use_remote_fusion=use_remote_fusion)
+                          use_remote_fusion=use_remote_fusion,
+                          dispatch=dispatch, plan_cache=plan_cache,
+                          autotune=autotune)
     if not differentiable:
         return sf
 
@@ -210,7 +325,8 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                 return pullback(ct)
             bwd_cache[key] = StitchedFunction(
                 vjp_fn, hw=hw, interpret=interpret,
-                use_remote_fusion=use_remote_fusion)
+                use_remote_fusion=use_remote_fusion, dispatch=dispatch,
+                plan_cache=plan_cache, autotune=autotune)
         return bwd_cache[key](cts, *args)
 
     wrapped.defvjp(fwd, bwd)

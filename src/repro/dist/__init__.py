@@ -1,0 +1,5 @@
+"""Distributed-execution utilities: sharding specs + named constraints."""
+from . import partitioning
+from .partitioning import constrain, param_specs, use_mesh
+
+__all__ = ["partitioning", "constrain", "param_specs", "use_mesh"]

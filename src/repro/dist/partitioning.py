@@ -1,0 +1,180 @@
+"""Parameter PartitionSpecs + named activation sharding constraints.
+
+The model code never mentions mesh axes: layers call
+``constrain(x, "act_btd")`` with a *name*, and this module resolves the
+name to a ``PartitionSpec`` against the active mesh context installed by
+``use_mesh``.  Outside a mesh context ``constrain`` is the identity, so
+single-device smoke tests and the stitching compiler see plain arrays.
+
+Axis conventions (see ``launch.mesh.make_production_mesh``):
+  DP spans ("pod", "data"); TP spans "model"; batch=1 long-context cells
+  reuse "data" for sequence parallelism (``seq_sharded``); Megatron-SP
+  train/prefill cells shard norm/elementwise activations' sequence dim
+  over "model" (``sp_model``).
+
+Every spec is passed through ``_fit_spec`` which repairs divisibility
+against the actual shape: parameter specs may *move* an axis to another
+divisible dim (the moe_tp rule: a 40-expert dim on a 16-way axis moves to
+d_ff), activation specs only *drop* non-divisible axes (moving a batch
+axis onto a feature dim would be nonsense).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# mesh context
+# ---------------------------------------------------------------------------
+@dataclass
+class _MeshCtx:
+    mesh: Any
+    seq_sharded: bool = False
+    moe_ep: str = "model"
+    kv_seq: tuple | None = None
+    sp_model: bool = False
+
+
+_LOCAL = threading.local()
+
+
+def current_ctx() -> _MeshCtx | None:
+    return getattr(_LOCAL, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, *, seq_sharded: bool = False, moe_ep: str = "model",
+             kv_seq: tuple | None = None, sp_model: bool = False):
+    """Install the mesh context ``constrain`` resolves names against."""
+    prev = current_ctx()
+    _LOCAL.ctx = _MeshCtx(mesh, seq_sharded, moe_ep, kv_seq, sp_model)
+    try:
+        yield
+    finally:
+        _LOCAL.ctx = prev
+
+
+# ---------------------------------------------------------------------------
+# divisibility repair
+# ---------------------------------------------------------------------------
+def _axis_size(mesh, axis) -> int:
+    sizes = mesh.shape
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= sizes[a]
+        return n
+    return sizes[axis]
+
+
+def _fit_spec(spec: P, shape: tuple[int, ...], mesh, *,
+              move: bool = True) -> P:
+    """Repair ``spec`` so every sharded dim divides by its mesh axis.
+
+    A non-divisible assignment either *moves* to another unsharded
+    divisible dim (searched from the last dim, so expert-parallel specs
+    fall back onto d_ff -- the moe_tp rule) or, with ``move=False`` or
+    when no dim fits, is dropped (replicated).
+    """
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out: list[Any] = [None] * len(shape)
+    homeless = []
+    for i, (p, d) in enumerate(zip(parts, shape)):
+        if p is None:
+            continue
+        if d % _axis_size(mesh, p) == 0:
+            out[i] = p
+        elif move:
+            homeless.append(p)
+    for p in homeless:
+        for i in range(len(shape) - 1, -1, -1):
+            if out[i] is None and shape[i] % _axis_size(mesh, p) == 0:
+                out[i] = p
+                break
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def param_specs(params_struct, mesh, moe_ep: str = "model"):
+    """PartitionSpec tree for a model parameter tree.
+
+    Rules (Megatron-style TP): up-projections shard the output dim,
+    down-projections the input dim, the embedding its vocab dim; MoE
+    expert weights shard the expert dim over ``moe_ep``.  Leaves may
+    carry leading stacked-layer axes (scanned blocks) -- the core spec is
+    right-aligned and the leading axes replicate.
+    """
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def assign(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        nd = len(leaf.shape)
+        last = names[-1] if names else ""
+        core: list[Any] | None = None
+        if tp is not None:
+            if ("moe" in names or "shared_experts" in names) and \
+                    last in ("w_gate", "w_up", "w_down"):
+                core = [moe_ep, None, None]
+            elif last == "embed":
+                core = [tp, None]
+            elif last == "lm_head":
+                core = [None, tp]
+            elif last in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w"):
+                core = [None, tp]
+            elif last in ("wo", "w_down", "out_proj"):
+                core = [tp, None]
+        if core is None or len(core) > nd:
+            return P(*([None] * nd))
+        spec = P(*([None] * (nd - len(core)) + core))
+        return _fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, params_struct)
+
+
+# ---------------------------------------------------------------------------
+# named activation constraints
+# ---------------------------------------------------------------------------
+def _named_spec(name: str, shape: tuple[int, ...], ctx: _MeshCtx) -> P | None:
+    mesh = ctx.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    tp = "model" if "model" in mesh.axis_names else None
+    batch = None if ctx.seq_sharded else dp
+    seq = ("data" if ctx.seq_sharded and "data" in mesh.axis_names
+           else tp if ctx.sp_model else None)
+
+    if name == "act_btd":                       # [B, S, d]
+        return P(batch, seq, None)
+    if name == "logits":                        # [B, S, V]: V over TP
+        return P(batch, "data" if ctx.seq_sharded else None, tp)
+    if name == "act_bhsd":                      # [B, H, S, Dh]: heads over TP
+        return P(batch, tp, None, None)
+    if name == "kv_cache":                      # [B, Hkv, S, Dh]
+        return P(batch, None, ctx.kv_seq, None)
+    if name == "ssm_state":                     # [B, H, P, N]
+        return P(batch, tp, None, None)
+    if name == "expert_ecd":                    # [E, C, d]
+        return P(ctx.moe_ep, None, None)
+    if name == "expert_gecd":                   # [G, E, C_g, d]
+        return P(dp, ctx.moe_ep, None, None)
+    return None
+
+
+def constrain(x, name: str):
+    """Apply the named sharding constraint when a mesh context is active."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = _named_spec(name, tuple(x.shape), ctx)
+    if spec is None:
+        return x
+    spec = _fit_spec(spec, tuple(x.shape), ctx.mesh, move=False)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,94 @@
+"""Minimal stand-in for the `hypothesis` API surface the suite uses.
+
+Installed by conftest only when the real package is missing, so the
+property-based tests keep running (as seeded random sweeps instead of
+shrinking searches) in minimal environments -- a hard top-level import
+would otherwise break *collection* of every module that imports it.
+
+Covers: given, settings, strategies.{integers, booleans, sampled_from,
+composite}.  Each @given test runs ``max_examples`` deterministic draws.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(seq):
+    items = list(seq)
+    return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def build(*args, **kwargs):
+        def draw_fn(rng):
+            def draw(strategy):
+                return strategy.example(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return _Strategy(draw_fn)
+
+    return build
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper():
+            n = getattr(fn, "_stub_max_examples", 10)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*drawn, **drawn_kw)
+
+        # no functools.wraps: pytest must see the zero-arg signature, not
+        # the strategy-bound params of ``fn`` (it would demand fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` + ``hypothesis.strategies`` modules."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name, obj in (("integers", integers), ("booleans", booleans),
+                      ("sampled_from", sampled_from), ("composite", composite)):
+        setattr(st, name, obj)
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
