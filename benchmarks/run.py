@@ -15,12 +15,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig1", "table2", "fig7", "overhead", "roofline",
-                             "plan_time"])
+                             "plan_time", "stitch_groups"])
     args = ap.parse_args()
 
     from . import (bench_fig1_layernorm, bench_fig7_speedup,
-                   bench_overhead, bench_plan_time, bench_table2_breakdown,
-                   roofline)
+                   bench_overhead, bench_plan_time, bench_stitch_groups,
+                   bench_table2_breakdown, roofline)
 
     suites = {
         "fig1": bench_fig1_layernorm.run,
@@ -29,6 +29,7 @@ def main() -> None:
         "overhead": bench_overhead.run,
         "roofline": roofline.run,
         "plan_time": bench_plan_time.run,
+        "stitch_groups": bench_stitch_groups.run,
     }
     selected = [args.only] if args.only else list(suites)
 

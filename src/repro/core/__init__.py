@@ -1,18 +1,21 @@
 """FusionStitching core: the paper's contribution as a composable JAX module."""
 from .costctx import CostContext, NullContext
-from .cost_model import Hardware, V5E, best_estimate, delta_evaluator
-from .ir import FusionPlan, Graph, Node, OpKind, Pattern
+from .cost_model import Hardware, V5E, best_estimate, delta_evaluator, \
+    stitch_gain
+from .ir import FusionPlan, Graph, Node, OpKind, Pattern, StitchGroup
 from .plan_cache import PlanCache, graph_signature
 from .planner import make_plan, plan_stats
 from .stitch import StitchedFunction, fusion_report, stitched_jit
+from .stitcher import make_groups
 from .tracer import trace
 
 __all__ = [
     "CostContext", "NullContext",
-    "Hardware", "V5E", "best_estimate", "delta_evaluator",
-    "FusionPlan", "Graph", "Node", "OpKind", "Pattern",
+    "Hardware", "V5E", "best_estimate", "delta_evaluator", "stitch_gain",
+    "FusionPlan", "Graph", "Node", "OpKind", "Pattern", "StitchGroup",
     "PlanCache", "graph_signature",
     "make_plan", "plan_stats",
     "StitchedFunction", "fusion_report", "stitched_jit",
+    "make_groups",
     "trace",
 ]

@@ -113,7 +113,7 @@ def _to_block(val, role: Role, br: int, C: int):
 
 @dataclass
 class Emitted:
-    """A compiled pattern: callable + the metadata benchmarks read."""
+    """A compiled pattern or stitch group: callable + benchmark metadata."""
     fn: Callable                 # (*ext_arrays) -> tuple(outputs)
     kind: str                    # "pallas" | "packed"
     estimate: KernelEstimate
@@ -121,6 +121,9 @@ class Emitted:
     out_ids: list[int]
     scratch_bytes: int
     scratch_naive_bytes: int
+    parts: tuple = ()            # member patterns (sorted id tuples); one
+                                 # entry per part, >1 for stitched groups
+    hbm_saved: int = 0           # inter-pattern HBM bytes the group avoids
 
 
 def _override_estimate(graph: Graph, pattern: frozenset[int], info,
@@ -161,7 +164,6 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
     if schedule_override is not None:
         est = _override_estimate(graph, pattern, info, schedule_override,
                                  hw, ctx=ctx)
-    override_applied = est is not None
     if est is None:
         est = (ctx.best(pattern) if ctx is not None
                else best_estimate(graph, pattern, hw))
@@ -179,21 +181,97 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
             fn = _emit_pallas(graph, pattern, info, est.block_rows, ext_ids,
                               out_ids, interpret=interpret)
             return Emitted(fn, "pallas", est, ext_ids, out_ids,
-                           scratch.total_bytes, scratch.naive_bytes)
+                           scratch.total_bytes, scratch.naive_bytes,
+                           parts=(tuple(sorted(pattern)),))
         if est.schedule == "streaming":
-            bc = (int(schedule_override.get("block_cols", 2048))
-                  if override_applied else 2048)
+            # the estimate carries the column tile (analytic sweep, tuned
+            # override or plan-cache entry alike -- no side-channel)
             fn = _emit_pallas_streaming(graph, pattern, info,
                                         est.block_rows, ext_ids, out_ids,
-                                        interpret=interpret, block_cols=bc)
+                                        interpret=interpret,
+                                        block_cols=est.block_cols or 2048)
             return Emitted(fn, "pallas", est, ext_ids, out_ids,
-                           scratch.total_bytes, scratch.naive_bytes)
+                           scratch.total_bytes, scratch.naive_bytes,
+                           parts=(tuple(sorted(pattern)),))
 
     fn = _emit_packed(graph, pattern, ext_ids, out_ids)
     if est.schedule in ("onepass", "streaming"):  # emitter gap: packed
         from .cost_model import estimate_packed
         est = estimate_packed(graph, pattern, hw, ctx=ctx)
-    return Emitted(fn, "packed", est, ext_ids, out_ids, 0, 0)
+    return Emitted(fn, "packed", est, ext_ids, out_ids, 0, 0,
+                   parts=(tuple(sorted(pattern)),))
+
+
+def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
+               interpret: bool = True, ctx=None,
+               schedule_override: dict | None = None) -> Emitted:
+    """Compile one stitch group into a single Pallas megakernel (paper §4).
+
+    ``parts`` are the group's member patterns in topological order.  A
+    single-part group degenerates to ``emit_pattern``.  Otherwise the
+    union is emitted as ONE ``pallas_call`` whose body executes the
+    member patterns back-to-back inside each grid cell: inter-pattern
+    values are staged in VMEM (``plan_group_scratch`` prices the
+    spanning liveness) instead of materialized to HBM, and the per-call
+    pad/reshape wrappers collapse to one boundary per group.  Mixed
+    onepass/streaming members share one grid: the union's streaming
+    schedule phases over the *cumulative* reduce levels (the max phase
+    count across the chain -- the paper's non-homogeneous-parallelism
+    case), while a union that fits VMEM residency runs all members in a
+    single one-pass cell.
+    """
+    parts = tuple(tuple(sorted(p)) for p in parts)
+    union = frozenset(n for p in parts for n in p)
+    if len(parts) == 1:
+        return emit_pattern(graph, union, hw=hw, interpret=interpret,
+                            ctx=ctx, schedule_override=schedule_override)
+
+    info = ctx.info(union) if ctx is not None else analyze(graph, union)
+    est = None
+    if schedule_override is not None:
+        est = _override_estimate(graph, union, info, schedule_override,
+                                 hw, ctx=ctx)
+    if est is None:
+        est = (ctx.best(union) if ctx is not None
+               else best_estimate(graph, union, hw))
+    parts_fs = tuple(frozenset(p) for p in parts)
+    if ctx is not None:
+        b = ctx.bounds(union)
+        ext_all, out_ids = list(b.inputs), list(b.outputs)
+        hbm_saved = ctx.stitch_gain(parts_fs).hbm_bytes_saved
+    else:
+        from .cost_model import stitch_gain
+        ext_all = graph.pattern_inputs(union)
+        out_ids = graph.pattern_outputs(union)
+        hbm_saved = stitch_gain(graph, parts_fs, hw).hbm_bytes_saved
+    ext_ids = [i for i in ext_all if graph.node(i).kind is not OpKind.CONST]
+
+    if pattern_emittable(graph, union, info=info) and \
+            est.schedule in ("onepass", "streaming"):
+        from .memory_planner import group_order, plan_group_scratch
+
+        scratch = plan_group_scratch(graph, parts_fs, info)
+        order = group_order(graph, parts_fs)
+        if est.schedule == "onepass":
+            fn = _emit_pallas(graph, union, info, est.block_rows, ext_ids,
+                              out_ids, interpret=interpret, order=order)
+        else:
+            fn = _emit_pallas_streaming(graph, union, info, est.block_rows,
+                                        ext_ids, out_ids,
+                                        interpret=interpret,
+                                        block_cols=est.block_cols or 2048,
+                                        order=order)
+        return Emitted(fn, "pallas", est, ext_ids, out_ids,
+                       scratch.total_bytes, scratch.naive_bytes,
+                       parts=parts, hbm_saved=hbm_saved)
+
+    # defensive fallback (stale cached group / emitter gap): the union
+    # still runs as one launch via kernel packing.
+    fn = _emit_packed(graph, union, ext_ids, out_ids)
+    from .cost_model import estimate_packed
+    est = estimate_packed(graph, union, hw, ctx=ctx)
+    return Emitted(fn, "packed", est, ext_ids, out_ids, 0, 0,
+                   parts=parts, hbm_saved=hbm_saved)
 
 
 _REDUCE_IDENTITY = {
@@ -210,7 +288,8 @@ _REDUCE_COMBINE = {
 def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
                            info: RowInfo, block_rows: int,
                            ext_ids: list[int], out_ids: list[int], *,
-                           interpret: bool, block_cols: int = 2048) -> Callable:
+                           interpret: bool, block_cols: int = 2048,
+                           order: list[int] | None = None) -> Callable:
     """Streaming multi-phase kernel (warp-composition analogue, §4.1).
 
     Grid (row_blocks, phases, col_tiles); the two trailing axes iterate
@@ -230,7 +309,7 @@ def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
     NC = math.ceil(C / bc)
     Cp = NC * bc
     roles = info.roles
-    members = sorted(pattern)
+    members = order if order is not None else sorted(pattern)
     lvl = reduce_levels(graph, pattern)
     reduces = [n for n in members if graph.node(n).kind is OpKind.REDUCE]
     phases = max(lvl.values(), default=0) + 1
@@ -406,11 +485,11 @@ def _emit_packed(graph: Graph, pattern: frozenset[int],
 
 def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
                  block_rows: int, ext_ids: list[int], out_ids: list[int],
-                 *, interpret: bool) -> Callable:
+                 *, interpret: bool, order: list[int] | None = None) -> Callable:
     R, C = info.R, info.C
     br = max(1, min(block_rows, R))
     Rp = math.ceil(R / br) * br
-    members = sorted(pattern)
+    members = order if order is not None else sorted(pattern)
     roles = info.roles
 
     # decide stage-vs-recompute for expensive multi-consumer sub-roots:

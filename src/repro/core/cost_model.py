@@ -65,7 +65,7 @@ def _pad(x: int, m: int) -> int:
 # ---------------------------------------------------------------------------
 @dataclass
 class KernelEstimate:
-    schedule: str           # "onepass" | "packed" | "unfused"
+    schedule: str           # "onepass" | "streaming" | "packed" | "unfused"
     block_rows: int
     latency_s: float
     hbm_bytes: int
@@ -73,6 +73,7 @@ class KernelEstimate:
     scratch_bytes: int      # per grid step
     n_steps: int
     feasible: bool
+    block_cols: int = 0     # streaming column tile (0: whole row / n.a.)
 
 
 def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
@@ -203,7 +204,8 @@ def estimate_streaming(graph: Graph, pattern: frozenset[int], info: RowInfo,
     hbm = (ctx.hbm_bytes(pattern) if ctx is not None
            else graph.pattern_hbm_bytes(pattern))
     return KernelEstimate("streaming", br, lat, hbm * phases,
-                          ops * n_steps, int(working), n_steps, feasible)
+                          ops * n_steps, int(working), n_steps, feasible,
+                          block_cols=bc)
 
 
 def estimate_packed(graph: Graph, pattern: frozenset[int],
@@ -262,6 +264,55 @@ def best_estimate(graph: Graph, pattern: frozenset[int],
             if est.feasible:
                 cands.append(est)
     return min(cands, key=lambda e: e.latency_s)
+
+
+# ---------------------------------------------------------------------------
+# cross-pattern stitch pricing (paper §4: megakernel composition)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StitchGain:
+    """What fusing several plan patterns into ONE kernel buys (or costs).
+
+    ``latency_gain_s`` compares the latency-evaluator's per-part sum
+    (each part its own ``pallas_call``: per-kernel launch + interface
+    tensors round-tripping HBM) against the best schedule of the union
+    kernel, which prices the added VMEM pressure -- a union that no
+    longer fits one-pass VMEM residency falls to the multi-phase
+    streaming schedule whose recompute cost may eat the saving, and a
+    union with no feasible stitched schedule is marked infeasible.
+    ``hbm_bytes_saved`` is the structural inter-pattern traffic
+    eliminated (interface writes + re-reads + shared-input re-reads).
+    """
+
+    latency_gain_s: float
+    hbm_bytes_saved: int
+    feasible: bool
+    union_schedule: str
+
+
+def stitch_gain(graph: Graph, parts, hw: Hardware = V5E,
+                ctx=None) -> StitchGain:
+    """Price merging the disjoint patterns ``parts`` into one kernel."""
+    union: frozenset[int] = frozenset()
+    for p in parts:
+        union |= p
+    if ctx is not None:
+        parts_lat = sum(ctx.best(p).latency_s for p in parts)
+        parts_hbm = sum(ctx.hbm_bytes(p) for p in parts)
+        u_est = ctx.best(union)
+        u_hbm = ctx.hbm_bytes(union)
+    else:
+        parts_lat = sum(best_estimate(graph, p, hw).latency_s for p in parts)
+        parts_hbm = sum(graph.pattern_hbm_bytes(p) for p in parts)
+        u_est = best_estimate(graph, union, hw)
+        u_hbm = graph.pattern_hbm_bytes(union)
+    feasible = u_est.feasible and u_est.schedule in ("onepass", "streaming")
+    return StitchGain(
+        latency_gain_s=parts_lat - u_est.latency_s,
+        hbm_bytes_saved=max(0, parts_hbm - u_hbm),
+        feasible=feasible,
+        union_schedule=u_est.schedule,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -78,6 +78,7 @@ class CostContext:
         self._nsig: dict[int, int] = {}       # nid -> interned static sig id
         self._sig_intern: dict[tuple, int] = {}
         self._convex: dict[frozenset[int], bool] = {}
+        self._stitch_gain: dict[tuple, object] = {}  # parts tuple -> StitchGain
 
     # -- structural queries --------------------------------------------------
     def is_convex(self, pattern: frozenset[int]) -> bool:
@@ -250,6 +251,21 @@ class CostContext:
 
             got = best_estimate(self.graph, pattern, self.hw, ctx=self)
             self._best[pattern] = got
+        return got
+
+    def stitch_gain(self, parts: tuple):
+        """Memoized cross-pattern stitch pricing (``cost_model.stitch_gain``).
+
+        The stitcher's greedy growth re-prices overlapping prefixes of
+        the same group; per-part estimates are already memoized via
+        ``best``/``hbm_bytes``, this memoizes the combination."""
+        key = tuple(parts)
+        got = self._stitch_gain.get(key)
+        if got is None:
+            from .cost_model import stitch_gain
+
+            got = stitch_gain(self.graph, key, self.hw, ctx=self)
+            self._stitch_gain[key] = got
         return got
 
 

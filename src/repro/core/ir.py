@@ -278,6 +278,24 @@ class Graph:
             total += rd + node.nbytes
         return total
 
+    def interface_values(self, parts: Sequence[frozenset[int]]) -> list[int]:
+        """Values produced in one of the disjoint patterns and consumed in
+        another -- the inter-pattern HBM round-trips cross-pattern
+        stitching (paper §4) eliminates: under per-pattern emission each
+        is written to HBM by the producer kernel and re-read by the
+        consumer kernel(s); inside one stitch group it is staged in VMEM
+        instead (``memory_planner.plan_group_scratch``)."""
+        owner: dict[int, int] = {}
+        for k, part in enumerate(parts):
+            for nid in part:
+                owner[nid] = k
+        return [nid for nid, k in sorted(owner.items())
+                if any(owner.get(c, k) != k for c in self.consumers(nid))]
+
+    def interface_bytes(self, parts: Sequence[frozenset[int]]) -> int:
+        """Total bytes flowing *between* the given disjoint patterns."""
+        return sum(self.nodes[n].nbytes for n in self.interface_values(parts))
+
     def subgraph_flops(self, pattern: Iterable[int]) -> int:
         """Element-op count (not MXU flops) of the pattern, for the VPU term."""
         total = 0
@@ -310,6 +328,35 @@ class Pattern:
 
     def overlaps(self, covered: set[int] | frozenset[int]) -> bool:
         return not self.members.isdisjoint(covered)
+
+
+@dataclass(frozen=True)
+class StitchGroup:
+    """An ordered set of fusion patterns emitted as ONE stitched kernel.
+
+    ``parts`` are disjoint convex patterns (plan patterns plus any
+    absorbed leftover singletons, each a singleton part) whose union is
+    itself convex and row-consistent; the group executes its members
+    back-to-back inside one Pallas grid cell, staging inter-part values
+    in VMEM instead of round-tripping HBM (paper §4's composition of
+    operators with varied data dependencies into one large kernel).
+    """
+
+    parts: tuple[frozenset[int], ...]
+
+    @functools.cached_property
+    def members(self) -> frozenset[int]:
+        out: frozenset[int] = frozenset()
+        for p in self.parts:
+            out |= p
+        return out
+
+    def __len__(self) -> int:
+        return len(self.parts)
+
+    @property
+    def stitched(self) -> bool:
+        return len(self.parts) > 1
 
 
 @dataclass

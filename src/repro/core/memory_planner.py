@@ -57,9 +57,16 @@ def dominators(graph: Graph, pattern: frozenset[int]) -> dict[int, set[int]]:
     return doms
 
 
-def plan_scratch(graph: Graph, pattern: frozenset[int], info: RowInfo) -> ScratchPlan:
-    """Assign VMEM scratch slots to pattern intermediates with reuse."""
-    order = sorted(pattern)
+def plan_scratch(graph: Graph, pattern: frozenset[int], info: RowInfo,
+                 order: list[int] | None = None) -> ScratchPlan:
+    """Assign VMEM scratch slots to pattern intermediates with reuse.
+
+    ``order`` overrides the emission linearization (must be a topological
+    order of ``pattern``); stitch groups pass the back-to-back member
+    concatenation so liveness spans pattern boundaries.
+    """
+    if order is None:
+        order = sorted(pattern)
     pos = {nid: i for i, nid in enumerate(order)}
     outputs = set(graph.pattern_outputs(pattern))
 
@@ -104,3 +111,66 @@ def plan_scratch(graph: Graph, pattern: frozenset[int], info: RowInfo) -> Scratc
         slot_free_at[chosen] = last_use.get(nid, pos[nid] + 1)
 
     return ScratchPlan(slot_of=slot_of, slot_bytes=slot_bytes, naive_bytes=naive)
+
+
+# ---------------------------------------------------------------------------
+# stitch groups: scratch planning across pattern boundaries (paper §4)
+# ---------------------------------------------------------------------------
+@dataclass
+class GroupScratchPlan(ScratchPlan):
+    """A ``ScratchPlan`` over a whole stitch group.
+
+    ``staged_ids`` are the inter-part interface values: produced by one
+    member pattern, consumed by another, and internal to the group --
+    exactly the tensors that round-trip HBM under per-pattern emission
+    and stay in VMEM scratch inside the stitched megakernel.
+    """
+
+    staged_ids: tuple[int, ...] = ()
+    staged_bytes_per_row: int = 0
+
+
+def group_order(graph: Graph, parts) -> list[int]:
+    """Back-to-back emission order of a group: members of each part in
+    topological order, parts ordered by first member.  Keeping each
+    part's values live over a contiguous range maximizes slot reuse
+    between parts; when the concatenation would break a dependence (an
+    interleaved part feeding an earlier part's tail) it falls back to
+    the global topological order."""
+    ordered = sorted((sorted(p) for p in parts), key=lambda p: p[0])
+    cat = [nid for part in ordered for nid in part]
+    union = set(cat)
+    seen: set[int] = set()
+    for nid in cat:
+        if any(i in union and i not in seen for i in graph.node(nid).inputs):
+            return sorted(cat)
+        seen.add(nid)
+    return cat
+
+
+def plan_group_scratch(graph: Graph, parts, info: RowInfo) -> GroupScratchPlan:
+    """``plan_scratch`` extended to span patterns: one allocation over the
+    concatenated member order, plus the staged-interface accounting the
+    stitch reports read."""
+    union: frozenset[int] = frozenset()
+    for p in parts:
+        union |= p
+    order = group_order(graph, parts)
+    base = plan_scratch(graph, union, info, order=order)
+
+    # staged = interface values that are internal to the group: crossing
+    # parts but with no reader outside (those are outputs: HBM anyway)
+    outset = set(graph.outputs)
+    staged: list[int] = []
+    staged_bytes = 0
+    for nid in graph.interface_values(parts):
+        cons = graph.consumers(nid)
+        if nid in outset or any(c not in union for c in cons):
+            continue
+        staged.append(nid)
+        staged_bytes += role_bytes_per_row(info.role(nid), info.C,
+                                           graph.node(nid).spec.itemsize)
+    return GroupScratchPlan(slot_of=base.slot_of, slot_bytes=base.slot_bytes,
+                            naive_bytes=base.naive_bytes,
+                            staged_ids=tuple(staged),
+                            staged_bytes_per_row=staged_bytes)

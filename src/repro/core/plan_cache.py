@@ -12,14 +12,20 @@ module implements that with a content-addressed on-disk cache:
     only in weights share one plan.
   * ``PlanCache`` stores one JSON file per signature under a root
     directory (``$REPRO_PLAN_CACHE``), written atomically so concurrent
-    processes can share a cache dir.
+    processes can share a cache dir.  The cache is bounded: stores
+    beyond ``max_entries`` (``$REPRO_PLAN_CACHE_MAX``, default 512)
+    evict the least-recently-used entries (loads refresh recency).
   * Entries record the chosen patterns *and* their tuned schedules
     (onepass/streaming/packed + block rows/cols), so a cache hit skips
     both exploration and the latency sweep.
+  * Entries also record the stitch-group composition (which patterns
+    plus which absorbed leftover singletons fused into each megakernel,
+    and the group's schedule), so a hit skips the stitcher pass too.
 
 Enable by exporting ``REPRO_PLAN_CACHE=/path/to/dir`` (or passing
 ``plan_cache=`` to ``stitched_jit``).  A stale or corrupt entry never
-breaks compilation: validation falls back to re-planning.
+breaks compilation: validation falls back to re-planning (or, for a
+bad groups section alone, to re-running just the stitcher).
 """
 from __future__ import annotations
 
@@ -28,13 +34,21 @@ import json
 import os
 import tempfile
 
-from .ir import FUSIBLE_KINDS, FusionPlan, Graph, Pattern
+from .ir import FUSIBLE_KINDS, FusionPlan, Graph, Pattern, StitchGroup
 
 #: Environment variable holding the cache root directory.
 ENV_DIR = "REPRO_PLAN_CACHE"
 
+#: Environment variable bounding the number of cached entries (LRU).
+ENV_MAX = "REPRO_PLAN_CACHE_MAX"
+
+#: Default entry bound when ``$REPRO_PLAN_CACHE_MAX`` is unset.
+DEFAULT_MAX_ENTRIES = 512
+
 #: Bump when the entry layout or planner semantics change incompatibly.
-FORMAT_VERSION = 1
+#: v2: stitch groups (group membership + group schedules) + planner-side
+#: MAX_PATTERN coalesce bound changed plan granularity.
+FORMAT_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -71,9 +85,16 @@ def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
 # entry <-> plan
 # ---------------------------------------------------------------------------
 def plan_to_entry(plan: FusionPlan, schedules: list[dict],
-                  signature: str) -> dict:
-    """Serialize a chosen plan + per-pattern schedule picks."""
-    return {
+                  signature: str,
+                  groups: "list[StitchGroup] | None" = None,
+                  group_schedules: list[dict] | None = None) -> dict:
+    """Serialize a chosen plan + per-pattern schedule picks.
+
+    ``groups`` (with per-group ``group_schedules``) additionally records
+    the stitch-group composition: each group names the plan patterns it
+    fuses by index plus any absorbed leftover singletons by node id.
+    """
+    entry = {
         "format": FORMAT_VERSION,
         "signature": signature,
         "patterns": [
@@ -81,6 +102,23 @@ def plan_to_entry(plan: FusionPlan, schedules: list[dict],
             for pat, sched in zip(plan.patterns, schedules)
         ],
     }
+    if groups is not None:
+        index_of = {pat.members: i for i, pat in enumerate(plan.patterns)}
+        recs = []
+        for gi, grp in enumerate(groups):
+            idxs, extra = [], []
+            for part in grp.parts:
+                i = index_of.get(part)
+                if i is not None:
+                    idxs.append(i)
+                else:  # absorbed leftover singleton(s)
+                    extra.extend(sorted(part))
+            rec: dict = {"parts": idxs, "extra": extra}
+            if group_schedules is not None and gi < len(group_schedules):
+                rec.update(group_schedules[gi])
+            recs.append(rec)
+        entry["groups"] = recs
+    return entry
 
 
 def entry_to_plan(entry: dict, graph: Graph
@@ -115,6 +153,64 @@ def entry_to_plan(entry: dict, graph: Graph
     return FusionPlan(patterns), overrides
 
 
+def entry_to_groups(entry: dict, plan: FusionPlan, graph: Graph
+                    ) -> "tuple[list[StitchGroup], list[dict]] | None":
+    """Reconstruct (stitch groups, per-group schedule overrides).
+
+    Validates pattern indices (each used at most once), absorbed extras
+    (fusible, outside every pattern, not duplicated) and union convexity
+    so a corrupt groups section degrades to re-running the stitcher --
+    never to a miscompile.  Patterns not referenced by any group become
+    singleton groups, so the result always covers the plan.
+    """
+    recs = entry.get("groups")
+    if not isinstance(recs, list):
+        return None
+    n = len(plan.patterns)
+    in_pattern = plan.covered()
+    used_idx: set[int] = set()
+    used_extra: set[int] = set()
+    groups: list[StitchGroup] = []
+    overrides: list[dict] = []
+    for rec in recs:
+        if not isinstance(rec, dict):
+            return None
+        try:
+            idxs = [int(i) for i in rec.get("parts", ())]
+            extra = [int(e) for e in rec.get("extra", ())]
+        except (TypeError, ValueError):
+            return None
+        if not idxs:
+            return None
+        for i in idxs:  # dupes within one record are corrupt too
+            if i < 0 or i >= n or i in used_idx:
+                return None
+            used_idx.add(i)
+        for e in extra:
+            if e in used_extra or e in in_pattern:
+                return None
+            node = graph.nodes.get(e)
+            if node is None or node.kind not in FUSIBLE_KINDS:
+                return None
+            used_extra.add(e)
+        parts = sorted(
+            [plan.patterns[i].members for i in idxs]
+            + [frozenset({e}) for e in extra], key=min)
+        union: frozenset[int] = frozenset()
+        for p in parts:
+            union |= p
+        if not graph.is_convex(union):
+            return None
+        groups.append(StitchGroup(tuple(parts)))
+        overrides.append(_sanitize_override(rec))
+    for i in range(n):  # unreferenced patterns: singleton groups
+        if i not in used_idx:
+            groups.append(StitchGroup((plan.patterns[i].members,)))
+            overrides.append({})
+    order = sorted(range(len(groups)), key=lambda k: min(groups[k].members))
+    return [groups[k] for k in order], [overrides[k] for k in order]
+
+
 def _sanitize_override(rec: dict) -> dict:
     """Keep only well-typed schedule fields; a malformed override must
     degrade to the analytic sweep, not crash emission."""
@@ -132,10 +228,23 @@ def _sanitize_override(rec: dict) -> dict:
 # on-disk store
 # ---------------------------------------------------------------------------
 class PlanCache:
-    """One JSON file per graph signature under ``root``."""
+    """One JSON file per graph signature under ``root``.
 
-    def __init__(self, root: str):
+    Bounded: when a store pushes the entry count past ``max_entries``
+    the least-recently-used entries (by file mtime; loads re-touch their
+    entry) are evicted, so a production cache dir cannot grow without
+    bound across deployed model revisions.
+    """
+
+    def __init__(self, root: str, max_entries: int | None = None):
         self.root = root
+        if max_entries is None:
+            try:
+                max_entries = int(os.environ.get(ENV_MAX,
+                                                 DEFAULT_MAX_ENTRIES))
+            except ValueError:
+                max_entries = DEFAULT_MAX_ENTRIES
+        self.max_entries = max(1, max_entries)
 
     @classmethod
     def from_env(cls) -> "PlanCache | None":
@@ -146,13 +255,18 @@ class PlanCache:
         return os.path.join(self.root, f"{signature}.json")
 
     def load(self, signature: str) -> dict | None:
+        path = self._path(signature)
         try:
-            with open(self._path(signature)) as f:
+            with open(path) as f:
                 entry = json.load(f)
         except (OSError, json.JSONDecodeError):
             return None
         if not isinstance(entry, dict) or entry.get("signature") != signature:
             return None
+        try:
+            os.utime(path, None)  # LRU: a hit refreshes recency
+        except OSError:
+            pass
         return entry
 
     def store(self, signature: str, entry: dict) -> None:
@@ -163,4 +277,20 @@ class PlanCache:
                 json.dump(entry, f, indent=1)
             os.replace(tmp, self._path(signature))  # atomic on POSIX
         except OSError:
-            pass  # a read-only cache dir must never break compilation
+            return  # a read-only cache dir must never break compilation
+        self._evict()
+
+    def _evict(self) -> None:
+        """Drop the oldest entries beyond ``max_entries`` (best-effort)."""
+        try:
+            paths = [os.path.join(self.root, name)
+                     for name in os.listdir(self.root)
+                     if name.endswith(".json")]
+            excess = len(paths) - self.max_entries
+            if excess <= 0:
+                return
+            paths.sort(key=lambda p: os.path.getmtime(p))
+            for p in paths[:excess]:
+                os.unlink(p)
+        except OSError:
+            pass  # concurrent evictors / permissions: never fatal

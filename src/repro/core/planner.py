@@ -75,7 +75,15 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
     the delta-evaluator scores the union at least as well as the parts
     (the union also saves a launch, folded into the score).  Leftover
     singletons adjacent to a pattern are absorbed the same way.
+
+    Merges respect the explorer's ``MAX_PATTERN`` guardrail: a *pattern*
+    stays small enough for the delta-evaluator's simplified VMEM model to
+    be trusted.  Composing kernels beyond that bound is the stitcher's
+    job (``stitcher.make_groups``), which prices unions with the accurate
+    latency evaluator instead.
     """
+    from .explorer import MAX_PATTERN
+
     if ctx is None:
         ctx = CostContext(graph, hw)
 
@@ -86,6 +94,8 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
         tmp_plan = FusionPlan([Pattern(m, 0.0) for m in pats], 0.0)
         for nid in _leftover_singletons(graph, tmp_plan):
             for i, members in enumerate(pats):
+                if len(members) >= MAX_PATTERN:
+                    continue
                 touches = (any(c in members for c in graph.consumers(nid))
                            or any(inp in members
                                   for inp in graph.node(nid).inputs))
@@ -102,6 +112,9 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
         while i < len(pats):
             j = i + 1
             while j < len(pats):
+                if len(pats[i]) + len(pats[j]) > MAX_PATTERN:
+                    j += 1
+                    continue
                 union = ctx.union(pats[i], pats[j])
                 if ctx.is_convex(union):
                     s_union = ctx.score(union)
@@ -275,31 +288,42 @@ class PlanStats:
 
 def plan_stats(graph: Graph, plan: FusionPlan,
                composition: str = "auto",
-               ctx: CostContext | None = None) -> PlanStats:
+               ctx: CostContext | None = None,
+               groups: "list | None" = None) -> PlanStats:
     """Plan metrics.  ``composition`` sets the reuse accounting:
       "auto"   -- per-pattern best schedule (block composition when the
                   row view exists, thread-composition packing otherwise),
       "thread" -- XLA-style thread-local reuse only (same-index chains
                   stay in registers; cross-parallelism intermediates
                   spill half the time): used for the XLA baseline rows.
+
+    With ``groups`` (a list of ``StitchGroup``) the launch/traffic
+    accounting is per stitched megakernel instead of per pattern:
+    ``n_patterns`` still reports the plan's granularity, while kernel
+    counts and HBM bytes reflect group execution.
     """
     from .cost_model import best_estimate
 
     fusible = graph.fusible_nodes()
     covered = plan.covered()
+    if groups is not None:
+        for g in groups:
+            covered = covered | g.members
     leftovers = [n for n in fusible if n not in covered]
     opaque = [n for n in graph.nodes if graph.node(n).kind is OpKind.OPAQUE
               and graph.node(n).prim != "tuple_get"]
 
+    units = ([g.members for g in groups] if groups is not None
+             else [p.members for p in plan.patterns])
     hbm_st = 0
-    for pat in plan.patterns:
+    for members in units:
         if composition == "thread":
-            hbm_st += (graph.pattern_hbm_bytes(pat.members)
-                       + graph.internal_bytes(pat.members) // 2)
+            hbm_st += (graph.pattern_hbm_bytes(members)
+                       + graph.internal_bytes(members) // 2)
         elif ctx is not None:
-            hbm_st += ctx.best(pat.members).hbm_bytes
+            hbm_st += ctx.best(members).hbm_bytes
         else:
-            hbm_st += best_estimate(graph, pat.members).hbm_bytes
+            hbm_st += best_estimate(graph, members).hbm_bytes
     for nid in leftovers + opaque:
         hbm_st += graph.unfused_hbm_bytes(frozenset({nid}))
 
@@ -310,7 +334,7 @@ def plan_stats(graph: Graph, plan: FusionPlan,
         n_nodes=len(graph),
         n_fusible=len(fusible),
         n_patterns=len(plan.patterns),
-        n_kernels_stitched=len(plan.patterns) + len(leftovers) + len(opaque),
+        n_kernels_stitched=len(units) + len(leftovers) + len(opaque),
         n_kernels_unfused=len(fusible) + len(opaque),
         hbm_bytes_stitched=hbm_st,
         hbm_bytes_unfused=hbm_un,

@@ -13,16 +13,27 @@ and, when ``$REPRO_PLAN_CACHE`` (or ``plan_cache=``) points at a
 directory, persistently across processes (the paper's
 tune-once-run-many model; dynamic shapes share its §7.5 limitation).
 
-Dispatch: the whole fusion schedule -- pallas_call patterns, packed
+Pipeline: trace -> plan (``make_plan``: patterns bounded by the
+explorer guardrail) -> **stitch** (``stitcher.make_groups``: adjacent
+row-compatible patterns and sandwiched singletons merge into stitch
+groups, priced by the latency evaluator) -> emit (ONE ``pallas_call``
+per group, inter-pattern values staged in VMEM -- the paper's §4
+megakernel).  Structurally isomorphic groups (repeated transformer
+layers) are emitted once and rebound per instance.
+
+Dispatch: the whole fusion schedule -- stitched group kernels, packed
 subgraphs and leftover singleton ops -- is composed into **one**
 ``jax.jit``-compiled callable, so a stitched call costs a single Python
 dispatch instead of one Python round-trip per schedule item (the
 per-kernel context-switch overhead the paper eliminates, §2.2).  The
 seed's per-item interpreter survives as ``dispatch="interpret"``: the
-equivalence oracle for tests and a debugging aid.
+equivalence oracle for tests and a debugging aid.  With ``donate=True``
+input buffers with no reader after the schedule are donated to XLA,
+cutting HBM pressure at decode batch sizes.
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -31,13 +42,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codegen import Emitted, emit_pattern
+from .codegen import Emitted, emit_group
 from .costctx import CostContext
-from .cost_model import Hardware, V5E
-from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind
-from .plan_cache import PlanCache, entry_to_plan, graph_signature, \
-    plan_to_entry
+from .cost_model import Hardware, KernelEstimate, V5E
+from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, StitchGroup
+from .plan_cache import PlanCache, entry_to_groups, entry_to_plan, \
+    graph_signature, plan_to_entry
 from .planner import PlanStats, make_plan, plan_stats
+from .stitcher import make_groups
 from .tracer import bind_node, trace
 
 
@@ -55,6 +67,12 @@ class StitchReport:
     autotuned: bool = False
     signature: str = ""
     dispatch: str = "single"
+    # -- stitch groups (paper §4 megakernels) --------------------------------
+    groups: list = field(default_factory=list)  # per group: tuple of parts
+    n_groups: int = 0                # macro-kernels emitted from patterns
+    n_stitched: int = 0              # groups fusing >1 part
+    stitched_hbm_bytes_saved: int = 0  # inter-pattern HBM traffic removed
+    emission_reused: int = 0         # isomorphic groups rebound, not re-emitted
 
 
 class _Compiled:
@@ -64,12 +82,15 @@ class _Compiled:
     ``jax.jit``, so it runs in Python once (at trace time) and every
     later call is a single compiled dispatch.  ``exec_count`` counts
     Python-level executions of the schedule body -- tests use it to
-    prove single-dispatch behavior.
+    prove single-dispatch behavior.  ``donate_argnums`` lists the flat
+    input positions donated to XLA (inputs no schedule item reads after
+    the call returns, i.e. every input that is not itself an output).
     """
 
     def __init__(self, graph: Graph, plan: FusionPlan,
                  emitted: list[Emitted], schedule: list[tuple[str, Any]],
-                 report: StitchReport, out_tree, dispatch: str = "single"):
+                 report: StitchReport, out_tree, dispatch: str = "single",
+                 donate: bool = False):
         self.graph = graph
         self.plan = plan
         self.emitted = emitted
@@ -78,7 +99,13 @@ class _Compiled:
         self.out_tree = out_tree
         self.dispatch = dispatch
         self.exec_count = 0
-        self._jitted = jax.jit(self._run_schedule)
+        self.donate_argnums: tuple[int, ...] = ()
+        if donate and dispatch == "single":
+            outset = set(graph.outputs)
+            self.donate_argnums = tuple(
+                i for i, nid in enumerate(graph.inputs) if nid not in outset)
+        self._jitted = jax.jit(self._run_schedule,
+                               donate_argnums=self.donate_argnums)
 
     def _run_schedule(self, *flat_args):
         """Execute the fusion schedule (traceable; jitted for dispatch)."""
@@ -110,7 +137,7 @@ class _Compiled:
 
 
 def _build_schedule(graph: Graph, emitted: list[Emitted]) -> list[tuple[str, Any]]:
-    """Topologically order macro-nodes (patterns + leftover singletons)."""
+    """Topologically order macro-nodes (groups + leftover singletons)."""
     member_of: dict[int, int] = {}
     for idx, em in enumerate(emitted):
         for nid in em._members:  # type: ignore[attr-defined]
@@ -140,19 +167,144 @@ def _build_schedule(graph: Graph, emitted: list[Emitted]) -> list[tuple[str, Any
             # Because patterns are convex, walking ids in topo order and
             # retrying at the *last* member always succeeds.
             continue
-    # second sweep for deferred patterns (rare: ext produced between members)
-    for idx, em in enumerate(emitted):
-        if not emitted_done[idx]:
-            schedule.append(("pattern", em))
-            emitted_done[idx] = True
+    # second sweep for deferred patterns (rare: ext produced between
+    # members) -- deferred groups may feed each other, so drain them in
+    # dependency order, not list order
+    remaining = [i for i, d in enumerate(emitted_done) if not d]
+    while remaining:
+        progressed = False
+        for idx in list(remaining):
+            em = emitted[idx]
+            if all(e in done for e in em.ext_ids):
+                schedule.append(("pattern", em))
+                done.update(em._members)  # type: ignore[attr-defined]
+                remaining.remove(idx)
+                progressed = True
+        if not progressed:  # unreachable for convex plans; never hang
+            for idx in remaining:
+                schedule.append(("pattern", emitted[idx]))
+            break
     return schedule
+
+
+# ---------------------------------------------------------------------------
+# isomorphic-emission dedup (CostContext.struct_key)
+# ---------------------------------------------------------------------------
+def _ext_seen_order(graph: Graph, union: frozenset[int],
+                    wanted: set[int]) -> list[int]:
+    """External inputs in first-reference order over the sorted members.
+
+    This order is *structural*: two unions with equal ``struct_key``
+    reference their externals in corresponding positions, which is what
+    lets one emitted kernel be rebound to another instance whose
+    id-sorted external order differs.
+    """
+    order: list[int] = []
+    seen: set[int] = set()
+    for nid in sorted(union):
+        for i in graph.node(nid).inputs:
+            if i in wanted and i not in seen:
+                seen.add(i)
+                order.append(i)
+    return order
+
+
+#: Consts above this element count are fingerprinted by identity (node
+#: id) instead of content: hashing a captured weight table per group per
+#: compile would dwarf the emission work the dedup saves.  Identity is
+#: conservative -- the *same* shared const node still dedups, distinct
+#: but equal-valued large consts merely refuse reuse.
+_CONST_HASH_MAX_ELEMS = 65536
+
+
+def _hash_const(h, nid: int, value) -> None:
+    v = np.asarray(value)
+    h.update(repr((v.shape, str(v.dtype))).encode())
+    if v.size <= _CONST_HASH_MAX_ELEMS:
+        h.update(v.tobytes())
+    else:
+        h.update(repr(("by-identity", nid)).encode())
+
+
+def _emit_signature(graph: Graph, ctx: CostContext, union: frozenset[int],
+                    override: dict | None) -> tuple:
+    """Dedup key for emission: structural isomorphism + everything the
+    emitted closure bakes in beyond the struct key (primitive params,
+    constant *values* -- member and external -- and the schedule pin)."""
+    h = hashlib.sha1()
+    params_fp = []
+    for nid in sorted(union):
+        n = graph.node(nid)
+        params_fp.append(tuple(sorted(
+            (k, repr(v)) for k, v in n.params.items()
+            if not k.startswith("_"))))
+        if n.kind is OpKind.CONST and n.value is not None:
+            _hash_const(h, nid, n.value)
+    seen: set[int] = set()
+    for nid in sorted(union):
+        for i in graph.node(nid).inputs:
+            if i in union or i in seen:
+                continue
+            seen.add(i)
+            cn = graph.node(i)
+            if cn.kind is OpKind.CONST and cn.value is not None:
+                _hash_const(h, i, cn.value)
+    return (ctx.struct_key(union), tuple(params_fp), h.hexdigest(),
+            tuple(sorted((override or {}).items())))
+
+
+def _rebind_emitted(graph: Graph, ctx: CostContext, union: frozenset[int],
+                    parts: tuple, template: Emitted,
+                    template_seen: list[int]) -> Emitted | None:
+    """Reuse a structurally identical compiled kernel for ``union``.
+
+    The template callable takes its externals in *its* id-sorted order;
+    this instance's id-sorted order can differ, so arguments are routed
+    through the shared first-seen correspondence.  Outputs are pattern
+    members in sorted order on both sides, hence positional.  Any shape
+    mismatch (defensive: struct keys should preclude it) refuses reuse.
+    """
+    b = ctx.bounds(union)
+    ext_ids = [i for i in b.inputs
+               if graph.node(i).kind is not OpKind.CONST]
+    out_ids = list(b.outputs)
+    seen = _ext_seen_order(graph, union, set(ext_ids))
+    if (len(seen) != len(template_seen)
+            or len(ext_ids) != len(template.ext_ids)
+            or len(out_ids) != len(template.out_ids)):
+        return None
+    t_slot = {e: s for s, e in enumerate(template_seen)}
+    pos = {e: j for j, e in enumerate(ext_ids)}
+    try:
+        mapping = tuple(pos[seen[t_slot[e]]] for e in template.ext_ids)
+    except (KeyError, IndexError):
+        return None
+
+    def rebound(*vals, _fn=template.fn, _m=mapping):
+        return _fn(*(vals[i] for i in _m))
+
+    return Emitted(rebound, template.kind, template.estimate, ext_ids,
+                   out_ids, template.scratch_bytes,
+                   template.scratch_naive_bytes, parts=parts,
+                   hbm_saved=template.hbm_saved)
+
+
+def _sched_of(est: KernelEstimate) -> dict:
+    """Persistable schedule pin of an estimate (incl. streaming tile)."""
+    d: dict = {"schedule": est.schedule}
+    if est.block_rows > 0:
+        d["block_rows"] = est.block_rows
+    if est.schedule == "streaming" and est.block_cols > 0:
+        d["block_cols"] = est.block_cols
+    return d
 
 
 class StitchedFunction:
     def __init__(self, fn: Callable, *, hw: Hardware = V5E,
                  interpret: bool = True, use_remote_fusion: bool = True,
                  dispatch: str = "single", plan_cache: str | None = None,
-                 autotune: bool = False):
+                 autotune: bool = False, stitch_groups: bool = True,
+                 donate: bool = False):
         if dispatch not in ("single", "interpret"):
             raise ValueError(
                 f"dispatch must be 'single' or 'interpret', got {dispatch!r}")
@@ -162,6 +314,8 @@ class StitchedFunction:
         self._remote = use_remote_fusion
         self._dispatch = dispatch
         self._autotune = autotune
+        self._stitch_groups = stitch_groups
+        self._donate = donate
         self._plan_cache = (PlanCache(plan_cache) if plan_cache
                             else PlanCache.from_env())
         self._cache: dict[tuple, _Compiled] = {}
@@ -171,13 +325,17 @@ class StitchedFunction:
                      for a in flat_args)
 
     def _load_cached_plan(self, graph: Graph, sig: str
-                          ) -> tuple[FusionPlan, list[dict]] | None:
+                          ) -> tuple[FusionPlan, list[dict], dict] | None:
         if self._plan_cache is None:
             return None
         entry = self._plan_cache.load(sig)
         if entry is None:
             return None
-        return entry_to_plan(entry, graph)
+        decoded = entry_to_plan(entry, graph)
+        if decoded is None:
+            return None
+        plan, overrides = decoded
+        return plan, overrides, entry
 
     def _compile(self, args, kwargs) -> tuple[_Compiled, Any]:
         flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
@@ -195,13 +353,14 @@ class StitchedFunction:
         sig = graph_signature(graph, self._hw, remote_fusion=self._remote)
 
         # persistent cache: an identical graph signature in any process
-        # reuses the stored patterns + tuned schedules and skips
-        # exploration entirely.
+        # reuses the stored patterns + group composition + tuned
+        # schedules and skips exploration *and* stitching entirely.
         overrides: list[dict] = []
+        entry: dict | None = None
         cached = self._load_cached_plan(graph, sig)
         autotuned = False
         if cached is not None:
-            plan, overrides = cached
+            plan, overrides, entry = cached
         else:
             plan = make_plan(graph, self._hw,
                              use_remote_fusion=self._remote, ctx=ctx)
@@ -218,30 +377,89 @@ class StitchedFunction:
             if not overrides:
                 overrides = [{} for _ in plan.patterns]
 
+        # ---- stitch groups: compose patterns into megakernels -------------
+        groups: list[StitchGroup]
+        group_overrides: list[dict]
+        groups_from_cache = False
+        if self._stitch_groups:
+            loaded = (entry_to_groups(entry, plan, graph)
+                      if entry is not None else None)
+            if loaded is not None:
+                groups, group_overrides = loaded
+                groups_from_cache = True
+            else:
+                groups = make_groups(graph, plan, self._hw, ctx=ctx)
+                group_overrides = [{} for _ in groups]
+        else:
+            groups = [StitchGroup((p.members,)) for p in plan.patterns]
+            group_overrides = [{} for _ in groups]
+
+        pat_over = {pat.members: over
+                    for pat, over in zip(plan.patterns, overrides)}
+
+        # ---- emission (isomorphic groups emitted once, rebound after) -----
+        emit_cache: dict[tuple, tuple[Emitted, list[int]]] = {}
         emitted: list[Emitted] = []
-        for pat, over in zip(plan.patterns, overrides):
-            em = emit_pattern(graph, pat.members, hw=self._hw,
-                              interpret=self._interpret, ctx=ctx,
-                              schedule_override=over or None)
-            em._members = sorted(pat.members)  # type: ignore[attr-defined]
+        reused = 0
+        for grp, gover in zip(groups, group_overrides):
+            union = grp.members
+            over = gover or (pat_over.get(grp.parts[0], {})
+                             if len(grp.parts) == 1 else {})
+            parts = tuple(tuple(sorted(p)) for p in grp.parts)
+            ekey = _emit_signature(graph, ctx, union, over)
+            em = None
+            hit = emit_cache.get(ekey)
+            if hit is not None:
+                em = _rebind_emitted(graph, ctx, union, parts, *hit)
+                if em is not None:
+                    reused += 1
+            if em is None:
+                em = emit_group(graph, grp.parts, hw=self._hw,
+                                interpret=self._interpret, ctx=ctx,
+                                schedule_override=over or None)
+                ext_set = set(em.ext_ids)
+                emit_cache[ekey] = (em, _ext_seen_order(graph, union,
+                                                        ext_set))
+            em._members = sorted(union)  # type: ignore[attr-defined]
             emitted.append(em)
         schedule = _build_schedule(graph, emitted)
 
-        if self._plan_cache is not None and cached is None:
+        store_fresh = self._plan_cache is not None and cached is None
+        # a cache hit whose entry lacked a usable groups section (e.g.
+        # first written by a stitch_groups=False baseline run) gets the
+        # freshly stitched composition written back once, so later
+        # processes skip the stitcher again.
+        store_groups_backfill = (self._plan_cache is not None
+                                 and cached is not None
+                                 and self._stitch_groups
+                                 and not groups_from_cache)
+        if store_fresh or store_groups_backfill:
+            em_of_pattern = {em.parts[0]: em for em in emitted
+                             if len(em.parts) == 1}
             schedules = []
-            for em, over in zip(emitted, overrides):
-                if over and em.estimate.schedule == over.get("schedule"):
-                    # the emitter honored a tuned override: persist it
-                    # verbatim (keeps streaming block_cols, which the
-                    # analytic KernelEstimate doesn't carry).
+            for pat, over in zip(plan.patterns, overrides):
+                em = em_of_pattern.get(tuple(sorted(pat.members)))
+                if em is not None:
+                    # emitted standalone: persist what actually ran (the
+                    # estimate carries tuned/streaming block_cols now)
+                    schedules.append(_sched_of(em.estimate))
+                elif over:
                     schedules.append(dict(over))
                 else:
-                    schedules.append({"schedule": em.estimate.schedule,
-                                      "block_rows": em.estimate.block_rows})
-            self._plan_cache.store(sig, plan_to_entry(plan, schedules, sig))
+                    schedules.append(_sched_of(ctx.best(pat.members)))
+            # groups are persisted only when the stitcher actually ran: a
+            # stitch_groups=False run (benchmark baseline, debugging) must
+            # not poison the shared cache with its degenerate singleton
+            # composition -- a later default-mode compile re-stitches.
+            groups_arg = groups if self._stitch_groups else None
+            group_scheds = ([_sched_of(em.estimate) for em in emitted]
+                            if self._stitch_groups else None)
+            self._plan_cache.store(
+                sig, plan_to_entry(plan, schedules, sig, groups=groups_arg,
+                                   group_schedules=group_scheds))
         plan_time = time.perf_counter() - t0
 
-        stats = plan_stats(graph, plan, ctx=ctx)
+        stats = plan_stats(graph, plan, ctx=ctx, groups=groups)
         report = StitchReport(
             stats=stats,
             n_pallas=sum(1 for e in emitted if e.kind == "pallas"),
@@ -254,13 +472,19 @@ class StitchedFunction:
             autotuned=autotuned,
             signature=sig,
             dispatch=self._dispatch,
+            groups=[g.parts for g in groups],
+            n_groups=len(groups),
+            n_stitched=sum(1 for g in groups if g.stitched),
+            stitched_hbm_bytes_saved=sum(e.hbm_saved for e in emitted),
+            emission_reused=reused,
         )
 
         # determine output tree
         out_shape = jax.eval_shape(flat_fn, *flat)
         _, out_tree = jax.tree_util.tree_flatten(out_shape)
         compiled = _Compiled(graph, plan, emitted, schedule, report,
-                             out_tree, dispatch=self._dispatch)
+                             out_tree, dispatch=self._dispatch,
+                             donate=self._donate)
         self._cache[key] = compiled
         return compiled, flat
 
@@ -283,15 +507,23 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                  differentiable: bool = False,
                  dispatch: str = "single",
                  plan_cache: str | None = None,
-                 autotune: bool = False) -> Callable:
-    """Wrap ``fn`` with the FusionStitching trace->plan->emit pipeline.
+                 autotune: bool = False,
+                 stitch_groups: bool = True,
+                 donate: bool = False) -> Callable:
+    """Wrap ``fn`` with the FusionStitching trace->plan->stitch->emit
+    pipeline.
 
     ``dispatch="single"`` (default) lowers the whole plan into one jitted
     callable; ``dispatch="interpret"`` keeps the per-schedule-item Python
-    interpreter.  ``plan_cache`` points at a persistent plan-cache
-    directory (defaults to ``$REPRO_PLAN_CACHE`` when set).  With
-    ``autotune=True`` and an accelerator present, block schedules are
-    measured instead of modeled (results land in the plan cache).
+    interpreter.  ``stitch_groups=False`` disables the cross-pattern
+    stitching pass (one kernel per plan pattern -- the baseline
+    ``benchmarks/bench_stitch_groups.py`` measures against).
+    ``donate=True`` donates input buffers the schedule never reads again
+    (any input that is not also an output) to XLA.  ``plan_cache`` points
+    at a persistent plan-cache directory (defaults to
+    ``$REPRO_PLAN_CACHE`` when set).  With ``autotune=True`` and an
+    accelerator present, block schedules are measured instead of modeled
+    (results land in the plan cache).
 
     With ``differentiable=True`` the wrapper carries a ``custom_vjp`` whose
     forward runs the stitched kernels and whose backward re-traces the VJP
@@ -299,10 +531,13 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
     are the primal inputs, matching the paper's training support where the
     backward graph is just another fusion-planned graph).
     """
+    # differentiable wrappers keep the primal inputs as VJP residuals, so
+    # the forward must not donate them out from under the backward pass.
     sf = StitchedFunction(fn, hw=hw, interpret=interpret,
                           use_remote_fusion=use_remote_fusion,
                           dispatch=dispatch, plan_cache=plan_cache,
-                          autotune=autotune)
+                          autotune=autotune, stitch_groups=stitch_groups,
+                          donate=donate and not differentiable)
     if not differentiable:
         return sf
 
@@ -326,7 +561,8 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
             bwd_cache[key] = StitchedFunction(
                 vjp_fn, hw=hw, interpret=interpret,
                 use_remote_fusion=use_remote_fusion, dispatch=dispatch,
-                plan_cache=plan_cache, autotune=autotune)
+                plan_cache=plan_cache, autotune=autotune,
+                stitch_groups=stitch_groups)
         return bwd_cache[key](cts, *args)
 
     wrapped.defvjp(fwd, bwd)

@@ -1,0 +1,177 @@
+"""Cross-pattern stitch grouping (paper §4: the stitched megakernel).
+
+``make_plan`` emits *patterns* -- convex fusible subgraphs bounded by the
+explorer's ``MAX_PATTERN`` guardrail and priced by the fast
+delta-evaluator.  Under per-pattern emission every pattern still lowers
+to its own ``pallas_call``, so values flowing between patterns
+round-trip HBM and each pattern pays its own launch + pad/reshape
+boundary -- the global-memory traffic and kernel-call overhead the
+paper's stitching scheme exists to remove.
+
+``make_groups`` is the pass between planning and emission that closes
+that gap: it greedily merges adjacent row-compatible patterns (and the
+fusible singleton ops sandwiched between them) into ``StitchGroup``s,
+each later emitted as ONE Pallas kernel executing its member patterns
+back-to-back with inter-pattern values staged in VMEM.  Merges are
+priced by ``cost_model.stitch_gain`` -- the accurate latency evaluator,
+which captures exactly the trade the delta-evaluator cannot: interface
+HBM bytes + launches saved vs. the VMEM pressure of the union (a union
+that no longer fits one-pass residency falls to the multi-phase
+streaming schedule; one with no feasible stitched schedule is refused).
+Groups may therefore exceed ``MAX_PATTERN``: stitching is how the
+system composes beyond the planning guardrail.
+"""
+from __future__ import annotations
+
+from .codegen import EMITTABLE_PRIMS, pattern_emittable
+from .cost_model import Hardware, V5E
+from .costctx import CostContext
+from .ir import FUSIBLE_KINDS, FusionPlan, Graph, StitchGroup
+
+#: Hard cap on stitched-union size (node count): VMEM scratch planning and
+#: kernel emission stay tractable.  Groups are intended to exceed the
+#: explorer's per-pattern bound, so this is several times MAX_PATTERN.
+MAX_GROUP_NODES = 512
+
+
+def _absorbable(graph: Graph, nid: int, covered: set[int]) -> bool:
+    """Can a leftover node ride along inside a stitched kernel?"""
+    node = graph.node(nid)
+    return (nid not in covered and node.kind in FUSIBLE_KINDS
+            and node.prim in EMITTABLE_PRIMS)
+
+
+def _convex_closure(graph: Graph, union: frozenset[int],
+                    covered: set[int]) -> tuple[frozenset[int], list[int]] | None:
+    """Close ``union`` under convexity by absorbing the violating nodes.
+
+    The violating set (outside nodes that are both descendants and
+    ancestors of members -- ``is_convex``'s mask test) is exactly the
+    ops *sandwiched* between the parts.  Each must be an absorbable
+    leftover singleton; anything else (an opaque op, a member of another
+    pattern) makes the merge illegal.  Returns (closed union, absorbed
+    node ids) or None.
+    """
+    desc, anc = graph.reachability()
+    absorbed: list[int] = []
+    for _ in range(len(graph)):  # absorbing can expose new violations
+        pmask = d = a = 0
+        for nid in union:
+            pmask |= 1 << nid
+            d |= desc[nid]
+            a |= anc[nid]
+        viol = d & a & ~pmask
+        if not viol:
+            return union, sorted(absorbed)
+        new: list[int] = []
+        while viol:
+            lsb = viol & -viol
+            nid = lsb.bit_length() - 1
+            viol ^= lsb
+            if not _absorbable(graph, nid, covered):
+                return None
+            new.append(nid)
+        absorbed.extend(new)
+        union = union | frozenset(new)
+    return None
+
+
+def _try_merge(graph: Graph, cur: list[frozenset[int]], pat: frozenset[int],
+               ctx: CostContext,
+               covered: set[int]) -> list[frozenset[int]] | None:
+    """Grow the current group by ``pat`` (+ sandwiched singletons); None if
+    the union is non-convex, not row-consistent, or not worth stitching."""
+    union: frozenset[int] = pat
+    for p in cur:
+        union |= p
+    if len(union) > MAX_GROUP_NODES:
+        return None
+    closed = _convex_closure(graph, union, covered)
+    if closed is None:
+        return None
+    union, extras = closed
+    if len(union) > MAX_GROUP_NODES:  # absorption must respect the cap too
+        return None
+    info = ctx.info(union)
+    if info is None or not pattern_emittable(graph, union, info=info):
+        return None
+    parts = sorted(cur + [frozenset({e}) for e in extras] + [pat], key=min)
+    gain = ctx.stitch_gain(tuple(parts))
+    if not gain.feasible or gain.latency_gain_s <= 0.0:
+        return None
+    return parts
+
+
+def _absorb_leftovers(graph: Graph, groups: list[list[frozenset[int]]],
+                      ctx: CostContext, covered: set[int]) -> None:
+    """Fold leftover fusible singletons adjacent to a group into it.
+
+    A leftover producer/consumer of a group member currently runs as a
+    bare op in the dispatch schedule; riding along inside the stitched
+    kernel removes its HBM round-trip for free when the union stays
+    row-consistent and the latency evaluator agrees.
+    """
+    for nid in graph.topo_order():
+        if not _absorbable(graph, nid, covered):
+            continue
+        node = graph.node(nid)
+        for g in groups:
+            members: frozenset[int] = frozenset()
+            for p in g:
+                members |= p
+            touches = (any(c in members for c in graph.consumers(nid))
+                       or any(i in members for i in node.inputs))
+            if not touches:
+                continue
+            union = members | {nid}
+            if len(union) > MAX_GROUP_NODES or not ctx.is_convex(union):
+                continue
+            info = ctx.info(union)
+            if info is None or not pattern_emittable(graph, union, info=info):
+                continue
+            parts = sorted(g + [frozenset({nid})], key=min)
+            gain = ctx.stitch_gain(tuple(parts))
+            if gain.feasible and gain.latency_gain_s >= 0.0:
+                g[:] = parts
+                covered.add(nid)
+                break
+
+
+def make_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
+                ctx: CostContext | None = None,
+                absorb_leftovers: bool = True) -> list[StitchGroup]:
+    """Partition the plan's patterns into stitch groups.
+
+    Greedy forward pass over patterns in topological (min-member) order:
+    each pattern either extends the open group -- when the union is
+    convex (absorbing sandwiched leftover singletons if needed), has a
+    consistent row view, and ``stitch_gain`` prices the stitched union
+    faster than per-pattern kernels -- or closes it and opens a new one.
+    Unmerged patterns become singleton groups, so the result always
+    covers every plan pattern exactly once.
+    """
+    if ctx is None:
+        ctx = CostContext(graph, hw)
+    pats = sorted((p.members for p in plan.patterns), key=lambda m: min(m))
+    covered: set[int] = set()
+    for m in pats:
+        covered |= m
+
+    groups: list[list[frozenset[int]]] = []
+    cur: list[frozenset[int]] = []
+    for pat in pats:
+        if cur:
+            merged = _try_merge(graph, cur, pat, ctx, covered)
+            if merged is not None:
+                cur = merged
+                for p in merged:
+                    covered |= p
+                continue
+            groups.append(cur)
+        cur = [pat]
+    if cur:
+        groups.append(cur)
+
+    if absorb_leftovers:
+        _absorb_leftovers(graph, groups, ctx, covered)
+    return [StitchGroup(tuple(g)) for g in groups]

@@ -94,7 +94,9 @@ def test_report_fields_consistent():
     rep = sf.report(*make())
     assert rep.stats.n_kernels_stitched <= rep.stats.n_kernels_unfused
     assert rep.stats.hbm_bytes_stitched <= rep.stats.hbm_bytes_unfused
-    assert rep.n_pallas + rep.n_packed == rep.stats.n_patterns
+    # one emitted kernel per stitch group; groups never outnumber patterns
+    assert rep.n_pallas + rep.n_packed == rep.n_groups
+    assert rep.n_groups <= rep.stats.n_patterns
     assert rep.scratch_bytes <= max(rep.scratch_naive_bytes, 1)
 
 
