@@ -6,7 +6,7 @@ from .ir import FusionPlan, Graph, Node, OpKind, Pattern, StitchGroup
 from .plan_cache import PlanCache, graph_signature
 from .planner import make_plan, plan_stats
 from .stitch import StitchedFunction, fusion_report, stitched_jit
-from .stitcher import make_groups
+from .stitcher import StitchStats, make_groups, search_groups
 from .tracer import trace
 
 __all__ = [
@@ -16,6 +16,6 @@ __all__ = [
     "PlanCache", "graph_signature",
     "make_plan", "plan_stats",
     "StitchedFunction", "fusion_report", "stitched_jit",
-    "make_groups",
+    "StitchStats", "make_groups", "search_groups",
     "trace",
 ]

@@ -124,6 +124,8 @@ class Emitted:
     parts: tuple = ()            # member patterns (sorted id tuples); one
                                  # entry per part, >1 for stitched groups
     hbm_saved: int = 0           # inter-pattern HBM bytes the group avoids
+    staged_slots: int = 0        # explicit VMEM scratch buffers allocated
+    io_aliases: dict = None      # ext pos -> out pos donated into the kernel
 
 
 def _override_estimate(graph: Graph, pattern: frozenset[int], info,
@@ -152,13 +154,48 @@ def _override_estimate(graph: Graph, pattern: frozenset[int], info,
     return None
 
 
+def _alias_map(graph: Graph, info: RowInfo, ext_ids: list[int],
+               out_ids: list[int],
+               donate_into: "frozenset[int] | None") -> dict[int, int] | None:
+    """Donate eligible inputs into the kernel's output buffers.
+
+    ``donate_into`` holds graph inputs whose only consumers live inside
+    this kernel (the caller's schedule-position analysis); each is
+    aliased to the first unclaimed output of identical padded shape and
+    dtype (FULL->FULL / ROW->ROW), so the one-pass grid can write output
+    block i over the input block it just consumed.
+    """
+    if not donate_into:
+        return None
+    aliases: dict[int, int] = {}
+    used: set[int] = set()
+    for i, e in enumerate(ext_ids):
+        if e not in donate_into:
+            continue
+        role = info.roles.get(e)
+        if role not in (Role.FULL, Role.ROW):
+            continue  # COL/scalar operands pad to a different leading dim
+        for j, o in enumerate(out_ids):
+            if j in used:
+                continue
+            if (info.roles[o] is role
+                    and graph.node(o).spec.dtype == graph.node(e).spec.dtype):
+                aliases[i] = j
+                used.add(j)
+                break
+    return aliases or None
+
+
 def emit_pattern(graph: Graph, pattern: frozenset[int], *,
                  hw: Hardware = V5E, interpret: bool = True,
                  force_packed: bool = False, ctx=None,
-                 schedule_override: dict | None = None) -> Emitted:
+                 schedule_override: dict | None = None,
+                 donate_into: "frozenset[int] | None" = None) -> Emitted:
     """Compile one pattern.  ``schedule_override`` (from the persistent
     plan cache or the measured autotuner) pins {schedule, block_rows,
-    block_cols} instead of re-running the analytic sweep."""
+    block_cols} instead of re-running the analytic sweep.
+    ``donate_into`` names graph inputs this kernel may overwrite with
+    its outputs (one-pass schedule only; see ``_alias_map``)."""
     info = ctx.info(pattern) if ctx is not None else analyze(graph, pattern)
     est = None
     if schedule_override is not None:
@@ -178,11 +215,14 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
     if not force_packed and pattern_emittable(graph, pattern, info=info):
         scratch = plan_scratch(graph, pattern, info)
         if est.schedule == "onepass":
+            aliases = _alias_map(graph, info, ext_ids, out_ids, donate_into)
             fn = _emit_pallas(graph, pattern, info, est.block_rows, ext_ids,
-                              out_ids, interpret=interpret)
+                              out_ids, interpret=interpret,
+                              io_aliases=aliases)
             return Emitted(fn, "pallas", est, ext_ids, out_ids,
                            scratch.total_bytes, scratch.naive_bytes,
-                           parts=(tuple(sorted(pattern)),))
+                           parts=(tuple(sorted(pattern)),),
+                           io_aliases=aliases)
         if est.schedule == "streaming":
             # the estimate carries the column tile (analytic sweep, tuned
             # override or plan-cache entry alike -- no side-channel)
@@ -204,7 +244,8 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
 
 def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
                interpret: bool = True, ctx=None,
-               schedule_override: dict | None = None) -> Emitted:
+               schedule_override: dict | None = None,
+               donate_into: "frozenset[int] | None" = None) -> Emitted:
     """Compile one stitch group into a single Pallas megakernel (paper §4).
 
     ``parts`` are the group's member patterns in topological order.  A
@@ -224,7 +265,8 @@ def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
     union = frozenset(n for p in parts for n in p)
     if len(parts) == 1:
         return emit_pattern(graph, union, hw=hw, interpret=interpret,
-                            ctx=ctx, schedule_override=schedule_override)
+                            ctx=ctx, schedule_override=schedule_override,
+                            donate_into=donate_into)
 
     info = ctx.info(union) if ctx is not None else analyze(graph, union)
     est = None
@@ -252,9 +294,19 @@ def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
 
         scratch = plan_group_scratch(graph, parts_fs, info)
         order = group_order(graph, parts_fs)
+        aliases = None
+        n_staged = 0
         if est.schedule == "onepass":
+            from .memory_planner import plan_staged_buffers
+
+            aliases = _alias_map(graph, info, ext_ids, out_ids, donate_into)
+            br = max(1, min(est.block_rows or 1, info.R))  # emitter clamp
+            staged = plan_staged_buffers(graph, info.roles, scratch, br,
+                                         info.C)
+            n_staged = len(staged[1])
             fn = _emit_pallas(graph, union, info, est.block_rows, ext_ids,
-                              out_ids, interpret=interpret, order=order)
+                              out_ids, interpret=interpret, order=order,
+                              staged=staged, io_aliases=aliases)
         else:
             fn = _emit_pallas_streaming(graph, union, info, est.block_rows,
                                         ext_ids, out_ids,
@@ -263,7 +315,8 @@ def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
                                         order=order)
         return Emitted(fn, "pallas", est, ext_ids, out_ids,
                        scratch.total_bytes, scratch.naive_bytes,
-                       parts=parts, hbm_saved=hbm_saved)
+                       parts=parts, hbm_saved=hbm_saved,
+                       staged_slots=n_staged, io_aliases=aliases)
 
     # defensive fallback (stale cached group / emitter gap): the union
     # still runs as one launch via kernel packing.
@@ -485,7 +538,9 @@ def _emit_packed(graph: Graph, pattern: frozenset[int],
 
 def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
                  block_rows: int, ext_ids: list[int], out_ids: list[int],
-                 *, interpret: bool, order: list[int] | None = None) -> Callable:
+                 *, interpret: bool, order: list[int] | None = None,
+                 staged: tuple | None = None,
+                 io_aliases: dict[int, int] | None = None) -> Callable:
     R, C = info.R, info.C
     br = max(1, min(block_rows, R))
     Rp = math.ceil(R / br) * br
@@ -505,9 +560,15 @@ def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
         width = C if role in (Role.FULL, Role.COL) else 1
         out_specs_shapes.append((width, node.spec.dtype))
 
+    # group emission: inter-pattern values ride in *explicit* VMEM scratch
+    # (the memory planner's slot assignment, precomputed by emit_group),
+    # not implicit env allocation.
+    staged_slot, scratch_buffers = staged if staged is not None else ({}, [])
+
     def kernel(*refs):
         in_refs = refs[: len(ext_ids)]
-        out_refs = refs[len(ext_ids):]
+        out_refs = refs[len(ext_ids): len(ext_ids) + len(out_ids)]
+        scratch_refs = refs[len(ext_ids) + len(out_ids):]
         env: dict[int, Any] = {}
         for nid, role, ref in zip(ext_ids, ext_roles, in_refs):
             env[nid] = _to_block(ref[...], role, br, C)
@@ -547,6 +608,12 @@ def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
                 env[nid] = val(node.inputs[0]) ** node.params.get("y", 2)
             else:
                 env[nid] = _OPS[prim](*(val(i) for i in node.inputs))
+            slot = staged_slot.get(nid)
+            if slot is not None:  # stage into the assigned VMEM buffer
+                sref = scratch_refs[slot]
+                sref[...] = jnp.broadcast_to(env[nid],
+                                             sref.shape).astype(sref.dtype)
+                env[nid] = sref[...]
 
         for ref, oid in zip(out_refs, out_ids):
             role = roles[oid]
@@ -571,12 +638,16 @@ def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
         out_specs.append(pl.BlockSpec((br, width), lambda i: (i, 0)))
         out_shapes.append(jax.ShapeDtypeStruct((Rp, width), dtype))
 
+    from jax.experimental.pallas import tpu as pltpu
     call = pl.pallas_call(
         kernel,
         grid=(Rp // br,),
         in_specs=in_specs,
         out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
         out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+        scratch_shapes=[pltpu.VMEM(shape, dtype)
+                        for shape, dtype in scratch_buffers],
+        input_output_aliases=dict(io_aliases or {}),
         interpret=interpret,
     )
 

@@ -293,9 +293,14 @@ class StitchGain:
 def stitch_gain(graph: Graph, parts, hw: Hardware = V5E,
                 ctx=None) -> StitchGain:
     """Price merging the disjoint patterns ``parts`` into one kernel."""
-    union: frozenset[int] = frozenset()
-    for p in parts:
-        union |= p
+    if ctx is not None:
+        # register the union's parts chain so its boundary sets derive
+        # incrementally from the parts' memoized bounds
+        union = ctx.union_all(parts)
+    else:
+        union = frozenset()
+        for p in parts:
+            union |= p
     if ctx is not None:
         parts_lat = sum(ctx.best(p).latency_s for p in parts)
         parts_hbm = sum(ctx.hbm_bytes(p) for p in parts)

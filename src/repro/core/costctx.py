@@ -128,6 +128,18 @@ class CostContext:
             self._parts[u] = (a, b)
         return u
 
+    def union_all(self, parts) -> frozenset[int]:
+        """Left-fold ``union`` over a parts sequence, registering every
+        prefix so a stitched union's bounds derive incrementally from
+        its (already-memoized) parts -- the beam search re-prices
+        overlapping prefixes of the same group constantly, and this
+        turns each re-price into O(boundary) instead of O(|union|)."""
+        it = iter(parts)
+        u = next(it)
+        for p in it:
+            u = self.union(u, p)
+        return u
+
     def _union_bounds(self, u: frozenset[int], a: frozenset[int],
                       b: frozenset[int]) -> PatternBounds:
         """Union bounds from the parts' bounds: only the parts' boundary

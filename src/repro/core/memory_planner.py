@@ -148,6 +148,42 @@ def group_order(graph: Graph, parts) -> list[int]:
     return cat
 
 
+def plan_staged_buffers(graph: Graph, roles, scratch_plan:
+                        "GroupScratchPlan", br: int, C: int):
+    """Explicit VMEM buffers for a group's staged interface values.
+
+    Staged values sharing a scratch slot (disjoint live ranges) share
+    one buffer when they agree on role and dtype; a mixed slot stays
+    implicit (Mosaic's env allocation) rather than risking a lossy
+    round-trip.  Returns (buffer index per staged node id,
+    [(block shape, dtype)] per buffer) -- the codegen turns the latter
+    into ``scratch_shapes`` on the group's ``pallas_call``.
+    """
+    staged_slot: dict[int, int] = {}
+    buffers: list[tuple[tuple[int, int], str]] = []
+    by_slot: dict[int, list[int]] = {}
+    for nid in scratch_plan.staged_ids:
+        s = scratch_plan.slot_of.get(nid)
+        if s is not None:
+            by_slot.setdefault(s, []).append(nid)
+    for _, nids in sorted(by_slot.items()):
+        keys = {(roles[n], graph.node(n).spec.dtype) for n in nids}
+        if len(keys) != 1:
+            continue
+        role, dtype = keys.pop()
+        if role is Role.FULL:
+            shape = (br, C)
+        elif role is Role.ROW:
+            shape = (br, 1)
+        else:
+            continue  # COL/scalar interface values: stay implicit
+        idx = len(buffers)
+        buffers.append((shape, dtype))
+        for n in nids:
+            staged_slot[n] = idx
+    return staged_slot, buffers
+
+
 def plan_group_scratch(graph: Graph, parts, info: RowInfo) -> GroupScratchPlan:
     """``plan_scratch`` extended to span patterns: one allocation over the
     concatenated member order, plus the staged-interface accounting the

@@ -48,7 +48,15 @@ DEFAULT_MAX_ENTRIES = 512
 #: Bump when the entry layout or planner semantics change incompatibly.
 #: v2: stitch groups (group membership + group schedules) + planner-side
 #: MAX_PATTERN coalesce bound changed plan granularity.
-FORMAT_VERSION = 2
+#: v3: measured *group* schedules (``tuned`` flag on group records) from
+#: the batched group autotuner.  v2 entries still load -- the pattern
+#: and group-composition sections are unchanged -- but their group
+#: schedules are dropped, degrading to re-tuning (or the analytic
+#: sweep) instead of erroring; the upgraded entry is written back.
+FORMAT_VERSION = 3
+
+#: Formats ``entry_to_plan`` / ``entry_to_groups`` still understand.
+SUPPORTED_FORMATS = (2, FORMAT_VERSION)
 
 
 # ---------------------------------------------------------------------------
@@ -59,6 +67,7 @@ def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
     planner configuration)."""
     from .explorer import MAX_GROUP, MAX_PATTERN, TOP_K
     from .planner import BEAM_WIDTH
+    from .stitcher import beam_width_from_env
 
     h = hashlib.sha256()
 
@@ -66,10 +75,14 @@ def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
         h.update(repr(xs).encode())
         h.update(b";")
 
-    w("format", FORMAT_VERSION)
+    # NOTE: the entry FORMAT_VERSION is deliberately *not* hashed --
+    # signatures are stable across format bumps so an old-format entry
+    # can be found and degraded (v2 -> re-tune) instead of orphaned.
+    # v3 itself rotated signatures once by adding the stitch beam width.
     w("hw", hw.peak_bf16_flops, hw.hbm_bw, hw.vpu_ops, hw.vmem_bytes,
       hw.launch_s, hw.hbm_latency_s)
-    w("knobs", TOP_K, MAX_GROUP, MAX_PATTERN, BEAM_WIDTH, remote_fusion)
+    w("knobs", TOP_K, MAX_GROUP, MAX_PATTERN, BEAM_WIDTH, remote_fusion,
+      beam_width_from_env())
     w("io", tuple(graph.inputs), tuple(graph.outputs))
     for nid in graph.topo_order():
         n = graph.node(nid)
@@ -129,7 +142,8 @@ def entry_to_plan(entry: dict, graph: Graph
     disjointness, convexity) so a corrupt or hand-edited entry degrades
     to a re-plan instead of a miscompile.
     """
-    if not isinstance(entry, dict) or entry.get("format") != FORMAT_VERSION:
+    if not isinstance(entry, dict) \
+            or entry.get("format") not in SUPPORTED_FORMATS:
         return None
     patterns: list[Pattern] = []
     overrides: list[dict] = []
@@ -162,10 +176,18 @@ def entry_to_groups(entry: dict, plan: FusionPlan, graph: Graph
     so a corrupt groups section degrades to re-running the stitcher --
     never to a miscompile.  Patterns not referenced by any group become
     singleton groups, so the result always covers the plan.
+
+    Version skew: a v2 entry's group *composition* loads unchanged, but
+    its group schedules predate measured group tuning and are dropped
+    (every override comes back empty), so the caller re-tunes (or falls
+    back to the analytic sweep) instead of trusting a stale pin.  v3
+    records may carry a ``tuned: true`` marker, passed through on the
+    override so reports can distinguish measured from analytic pins.
     """
     recs = entry.get("groups")
     if not isinstance(recs, list):
         return None
+    format_v = entry.get("format")
     n = len(plan.patterns)
     in_pattern = plan.covered()
     used_idx: set[int] = set()
@@ -202,7 +224,13 @@ def entry_to_groups(entry: dict, plan: FusionPlan, graph: Graph
         if not graph.is_convex(union):
             return None
         groups.append(StitchGroup(tuple(parts)))
-        overrides.append(_sanitize_override(rec))
+        if format_v == 2:  # pre-group-tuning schedules: degrade to re-tune
+            overrides.append({})
+            continue
+        over = _sanitize_override(rec)
+        if over and rec.get("tuned") is True:
+            over["tuned"] = True
+        overrides.append(over)
     for i in range(n):  # unreferenced patterns: singleton groups
         if i not in used_idx:
             groups.append(StitchGroup((plan.patterns[i].members,)))

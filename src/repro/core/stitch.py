@@ -46,10 +46,10 @@ from .codegen import Emitted, emit_group
 from .costctx import CostContext
 from .cost_model import Hardware, KernelEstimate, V5E
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, StitchGroup
-from .plan_cache import PlanCache, entry_to_groups, entry_to_plan, \
-    graph_signature, plan_to_entry
+from .plan_cache import FORMAT_VERSION, PlanCache, entry_to_groups, \
+    entry_to_plan, graph_signature, plan_to_entry
 from .planner import PlanStats, make_plan, plan_stats
-from .stitcher import make_groups
+from .stitcher import search_groups
 from .tracer import bind_node, trace
 
 
@@ -73,6 +73,11 @@ class StitchReport:
     n_stitched: int = 0              # groups fusing >1 part
     stitched_hbm_bytes_saved: int = 0  # inter-pattern HBM traffic removed
     emission_reused: int = 0         # isomorphic groups rebound, not re-emitted
+    # -- beam-search partition + measured group tuning -----------------------
+    beam_width: int = 0              # partition search width (0: search skipped)
+    beam_states_explored: int = 0    # states priced by the partition search
+    group_tuned: int = 0             # groups with a *measured* schedule
+    group_tuned_wins: int = 0        # ...where measurement beat the analytic pick
 
 
 class _Compiled:
@@ -368,11 +373,20 @@ class StitchedFunction:
                 from .autotune import autotune_available, tune_pattern
 
                 if autotune_available():
+                    # isomorphic patterns (repeated layers) share one
+                    # measured sweep: timing depends on structure +
+                    # shapes, not on which instance runs it.
+                    tuned_by_struct: dict[tuple, dict] = {}
                     for pat in plan.patterns:
-                        over = tune_pattern(graph, pat.members, hw=self._hw,
-                                            interpret=self._interpret,
-                                            ctx=ctx)
-                        overrides.append(over or {})
+                        skey = ctx.struct_key(pat.members)
+                        over = tuned_by_struct.get(skey)
+                        if over is None:
+                            over = tune_pattern(graph, pat.members,
+                                                hw=self._hw,
+                                                interpret=self._interpret,
+                                                ctx=ctx) or {}
+                            tuned_by_struct[skey] = over
+                        overrides.append(over)
                     autotuned = True
             if not overrides:
                 overrides = [{} for _ in plan.patterns]
@@ -381,6 +395,7 @@ class StitchedFunction:
         groups: list[StitchGroup]
         group_overrides: list[dict]
         groups_from_cache = False
+        stitch_stats = None
         if self._stitch_groups:
             loaded = (entry_to_groups(entry, plan, graph)
                       if entry is not None else None)
@@ -388,25 +403,104 @@ class StitchedFunction:
                 groups, group_overrides = loaded
                 groups_from_cache = True
             else:
-                groups = make_groups(graph, plan, self._hw, ctx=ctx)
+                groups, stitch_stats = search_groups(graph, plan, self._hw,
+                                                     ctx=ctx)
                 group_overrides = [{} for _ in groups]
         else:
             groups = [StitchGroup((p.members,)) for p in plan.patterns]
             group_overrides = [{} for _ in groups]
 
+        # ---- measured group tuning (paper: tune the stitching scheme) -----
+        # Stitched unions get their onepass/streaming phase split + tile
+        # measured (batch-compiled sweep); a cache hit that already holds
+        # a measured pin (override carries ``tuned``) is trusted, and a
+        # v2-format entry arrives with its group schedules dropped, so it
+        # re-tunes here instead of erroring.
+        group_tuned = group_tuned_wins = 0
+        tuned_fresh = False
+        if self._autotune and self._stitch_groups:
+            from .autotune import autotune_available, tune_group
+
+            if autotune_available():
+                # isomorphic groups share one measured sweep (same
+                # rationale as emission dedup: struct_key equality means
+                # identical kernels up to constant values).
+                group_tuned_by_struct: dict[tuple, dict | None] = {}
+                for gi, grp in enumerate(groups):
+                    if not grp.stitched:
+                        continue  # single patterns: tune_pattern's job
+                    gover = group_overrides[gi]
+                    analytic = _sched_of(ctx.best(grp.members))
+                    if gover.get("tuned"):
+                        group_tuned += 1
+                        pin = {k: v for k, v in gover.items()
+                               if k != "tuned"}
+                        group_tuned_wins += pin != analytic
+                        continue
+                    skey = ctx.struct_key(grp.members)
+                    if skey in group_tuned_by_struct:
+                        over = group_tuned_by_struct[skey]
+                    else:
+                        over = tune_group(graph, grp.parts, hw=self._hw,
+                                          interpret=self._interpret,
+                                          ctx=ctx)
+                        group_tuned_by_struct[skey] = over
+                    if over is None:
+                        continue
+                    group_tuned += 1
+                    group_tuned_wins += over != analytic
+                    group_overrides[gi] = dict(over, tuned=True)
+                    tuned_fresh = True
+                autotuned = True
+
         pat_over = {pat.members: over
                     for pat, over in zip(plan.patterns, overrides)}
+
+        # ---- finer donation: schedule-position analysis -------------------
+        # The first schedule item's kernel may overwrite graph inputs whose
+        # only consumers are its own members (they are dead the moment it
+        # has read them): those inputs alias the kernel's output buffers
+        # (``input_output_aliases`` on the pallas_call) on top of the
+        # jit-level ``donate_argnums`` donation.
+        donate_first: frozenset[int] = frozenset()
+        first_idx = -1
+        if self._donate and self._dispatch == "single":
+            member_of: dict[int, int] = {}
+            for gi, grp in enumerate(groups):
+                for nid in grp.members:
+                    member_of[nid] = gi
+            inset = set(graph.inputs)
+            for nid in graph.topo_order():
+                if nid in inset or graph.node(nid).kind is OpKind.CONST:
+                    continue
+                first_idx = member_of.get(nid, -1)
+                break
+            if first_idx >= 0:
+                members = groups[first_idx].members
+                ready = all(i in inset
+                            or graph.node(i).kind is OpKind.CONST
+                            for i in ctx.bounds(members).inputs)
+                outset = set(graph.outputs)
+                donate_first = frozenset(
+                    i for i in graph.inputs
+                    if ready and i not in outset and graph.consumers(i)
+                    and all(c in members for c in graph.consumers(i)))
+                if not donate_first:
+                    first_idx = -1
 
         # ---- emission (isomorphic groups emitted once, rebound after) -----
         emit_cache: dict[tuple, tuple[Emitted, list[int]]] = {}
         emitted: list[Emitted] = []
         reused = 0
-        for grp, gover in zip(groups, group_overrides):
+        for gi, (grp, gover) in enumerate(zip(groups, group_overrides)):
             union = grp.members
             over = gover or (pat_over.get(grp.parts[0], {})
                              if len(grp.parts) == 1 else {})
             parts = tuple(tuple(sorted(p)) for p in grp.parts)
-            ekey = _emit_signature(graph, ctx, union, over)
+            donate_into = donate_first if gi == first_idx else None
+            ekey = _emit_signature(graph, ctx, union, over) + (
+                ("donate", tuple(sorted(donate_first)))
+                if donate_into else ())
             em = None
             hit = emit_cache.get(ekey)
             if hit is not None:
@@ -416,7 +510,8 @@ class StitchedFunction:
             if em is None:
                 em = emit_group(graph, grp.parts, hw=self._hw,
                                 interpret=self._interpret, ctx=ctx,
-                                schedule_override=over or None)
+                                schedule_override=over or None,
+                                donate_into=donate_into)
                 ext_set = set(em.ext_ids)
                 emit_cache[ekey] = (em, _ext_seen_order(graph, union,
                                                         ext_set))
@@ -428,11 +523,16 @@ class StitchedFunction:
         # a cache hit whose entry lacked a usable groups section (e.g.
         # first written by a stitch_groups=False baseline run) gets the
         # freshly stitched composition written back once, so later
-        # processes skip the stitcher again.
+        # processes skip the stitcher again.  Likewise an entry in an
+        # older format (v2: no measured group schedules), or one whose
+        # groups were just measured for the first time, is rewritten in
+        # the current format so later processes skip the re-tune.
         store_groups_backfill = (self._plan_cache is not None
                                  and cached is not None
                                  and self._stitch_groups
-                                 and not groups_from_cache)
+                                 and (not groups_from_cache or tuned_fresh
+                                      or entry.get("format")
+                                      != FORMAT_VERSION))
         if store_fresh or store_groups_backfill:
             em_of_pattern = {em.parts[0]: em for em in emitted
                              if len(em.parts) == 1}
@@ -451,8 +551,12 @@ class StitchedFunction:
             # stitch_groups=False run (benchmark baseline, debugging) must
             # not poison the shared cache with its degenerate singleton
             # composition -- a later default-mode compile re-stitches.
+            # measured group pins persist verbatim (with their ``tuned``
+            # marker); analytic ones persist what actually emitted.
             groups_arg = groups if self._stitch_groups else None
-            group_scheds = ([_sched_of(em.estimate) for em in emitted]
+            group_scheds = ([dict(gover) if gover.get("tuned")
+                             else _sched_of(em.estimate)
+                             for em, gover in zip(emitted, group_overrides)]
                             if self._stitch_groups else None)
             self._plan_cache.store(
                 sig, plan_to_entry(plan, schedules, sig, groups=groups_arg,
@@ -477,6 +581,11 @@ class StitchedFunction:
             n_stitched=sum(1 for g in groups if g.stitched),
             stitched_hbm_bytes_saved=sum(e.hbm_saved for e in emitted),
             emission_reused=reused,
+            beam_width=(stitch_stats.beam_width if stitch_stats else 0),
+            beam_states_explored=(stitch_stats.states_explored
+                                  if stitch_stats else 0),
+            group_tuned=group_tuned,
+            group_tuned_wins=group_tuned_wins,
         )
 
         # determine output tree

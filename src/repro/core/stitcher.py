@@ -8,20 +8,39 @@ round-trip HBM and each pattern pays its own launch + pad/reshape
 boundary -- the global-memory traffic and kernel-call overhead the
 paper's stitching scheme exists to remove.
 
-``make_groups`` is the pass between planning and emission that closes
-that gap: it greedily merges adjacent row-compatible patterns (and the
-fusible singleton ops sandwiched between them) into ``StitchGroup``s,
-each later emitted as ONE Pallas kernel executing its member patterns
-back-to-back with inter-pattern values staged in VMEM.  Merges are
-priced by ``cost_model.stitch_gain`` -- the accurate latency evaluator,
-which captures exactly the trade the delta-evaluator cannot: interface
-HBM bytes + launches saved vs. the VMEM pressure of the union (a union
-that no longer fits one-pass residency falls to the multi-phase
-streaming schedule; one with no feasible stitched schedule is refused).
-Groups may therefore exceed ``MAX_PATTERN``: stitching is how the
-system composes beyond the planning guardrail.
+``search_groups`` is the pass between planning and emission that closes
+that gap: it partitions the pattern chain (patterns in min-member order,
+plus the fusible singleton ops sandwiched between them) into
+``StitchGroup``s, each later emitted as ONE Pallas kernel executing its
+member patterns back-to-back with inter-pattern values staged in VMEM.
+Partitions are priced by ``cost_model.stitch_gain`` -- the accurate
+latency evaluator, which captures exactly the trade the delta-evaluator
+cannot: interface HBM bytes + launches saved vs. the VMEM pressure of
+the union (a union that no longer fits one-pass residency falls to the
+multi-phase streaming schedule; one with no feasible stitched schedule
+is refused).  Groups may therefore exceed ``MAX_PATTERN``: stitching is
+how the system composes beyond the planning guardrail.
+
+The partition itself is found by a **beam search** over group
+boundaries (``$REPRO_STITCH_BEAM``, default 4): each beam state is a
+prefix partition of the chain, scored by its cumulative modeled latency
+gain; at every pattern a state either extends its open group or closes
+it.  Width 1 degenerates to the original greedy forward merge, which a
+wider beam can only match or beat -- the chosen partition is compared
+against the greedy one and the better (by total gain) is returned, so
+beam results are never worse under the cost model.  All union pricing
+goes through the ``CostContext`` memos (``stitch_gain`` keyed by the
+parts tuple, ``info``/``bounds``/``best`` keyed by the union), so
+repeated prefixes across beam states are priced once.  Chains are first
+split into independent *segments* at structurally unmergeable
+boundaries, and structurally isomorphic segments (repeated transformer
+layers, recognized via ``CostContext.struct_key``) replay the first
+instance's searched partition instead of re-searching.
 """
 from __future__ import annotations
+
+import os
+from dataclasses import dataclass
 
 from .codegen import EMITTABLE_PRIMS, pattern_emittable
 from .cost_model import Hardware, V5E
@@ -32,6 +51,32 @@ from .ir import FUSIBLE_KINDS, FusionPlan, Graph, StitchGroup
 #: kernel emission stay tractable.  Groups are intended to exceed the
 #: explorer's per-pattern bound, so this is several times MAX_PATTERN.
 MAX_GROUP_NODES = 512
+
+#: Env knob: beam width of the stitch-partition search (1 = greedy).
+ENV_BEAM = "REPRO_STITCH_BEAM"
+
+#: Default beam width when ``$REPRO_STITCH_BEAM`` is unset.
+DEFAULT_BEAM_WIDTH = 4
+
+
+def beam_width_from_env() -> int:
+    try:
+        width = int(os.environ.get(ENV_BEAM, DEFAULT_BEAM_WIDTH))
+    except ValueError:
+        return DEFAULT_BEAM_WIDTH
+    return max(1, width)
+
+
+@dataclass
+class StitchStats:
+    """What the partition search did (surfaces in ``StitchReport``)."""
+
+    beam_width: int = 1
+    states_explored: int = 0     # successor states priced across segments
+    segments: int = 0            # independent subchains searched
+    segments_reused: int = 0     # isomorphic segments replaying a partition
+    gain_s: float = 0.0          # total modeled latency gain of the result
+    greedy_gain_s: float = 0.0   # what the width-1 (greedy) partition gains
 
 
 def _absorbable(graph: Graph, nid: int, covered: set[int]) -> bool:
@@ -77,10 +122,17 @@ def _convex_closure(graph: Graph, union: frozenset[int],
 
 
 def _try_merge(graph: Graph, cur: list[frozenset[int]], pat: frozenset[int],
-               ctx: CostContext,
-               covered: set[int]) -> list[frozenset[int]] | None:
+               ctx: CostContext, covered: set[int],
+               require_gain: bool = True) -> list[frozenset[int]] | None:
     """Grow the current group by ``pat`` (+ sandwiched singletons); None if
-    the union is non-convex, not row-consistent, or not worth stitching."""
+    the union is non-convex, not row-consistent, or (``require_gain``)
+    infeasible / not worth stitching.  The beam search passes
+    ``require_gain=False`` so it can hold unions whose gain only turns
+    positive -- or whose schedule only turns feasible -- after further
+    growth (a combine stage can *shrink* the union's IO working set);
+    such open groups score zero until they price well, and are split
+    back into their parts if still unprofitable when the state closes.
+    """
     union: frozenset[int] = pat
     for p in cur:
         union |= p
@@ -92,14 +144,229 @@ def _try_merge(graph: Graph, cur: list[frozenset[int]], pat: frozenset[int],
     union, extras = closed
     if len(union) > MAX_GROUP_NODES:  # absorption must respect the cap too
         return None
+    parts = sorted(cur + [frozenset({e}) for e in extras] + [pat], key=min)
+    union = ctx.union_all(parts)  # register parts: incremental bounds
     info = ctx.info(union)
     if info is None or not pattern_emittable(graph, union, info=info):
         return None
-    parts = sorted(cur + [frozenset({e}) for e in extras] + [pat], key=min)
-    gain = ctx.stitch_gain(tuple(parts))
-    if not gain.feasible or gain.latency_gain_s <= 0.0:
-        return None
+    if require_gain:
+        gain = ctx.stitch_gain(tuple(parts))
+        if not gain.feasible or gain.latency_gain_s <= 0.0:
+            return None
     return parts
+
+
+def _pair_mergeable(graph: Graph, a: frozenset[int],
+                    b: frozenset[int], ctx: CostContext) -> bool:
+    """Could ``a`` and ``b`` ever share a group?  Structural tests only
+    (convex closure, row view, emittable prims, size cap) -- all
+    monotone under union growth, so a failing pair is a hard segment
+    boundary no partition can cross.  The closure runs with an empty
+    ``covered`` set: a sandwiched node belonging to another plan pattern
+    is no obstacle (that pattern would simply join the group), only an
+    opaque / non-emittable one is.  Gain is deliberately not tested: a
+    pair whose union prices badly may still join a profitable wider
+    group.
+    """
+    union = a | b
+    if len(union) > MAX_GROUP_NODES:
+        return False
+    closed = _convex_closure(graph, union, set())
+    if closed is None:
+        return False
+    union, _ = closed
+    if len(union) > MAX_GROUP_NODES:
+        return False
+    info = ctx.info(union)
+    return info is not None and pattern_emittable(graph, union, info=info)
+
+
+@dataclass(frozen=True)
+class _State:
+    """One beam state: a prefix partition of the segment's chain."""
+
+    closed: tuple            # closed groups, each a tuple of parts
+    cur: tuple               # open group's parts ((): none yet)
+    absorbed: frozenset      # leftover singletons absorbed by this state
+    gain: float              # cumulative latency gain incl. the open group
+    cur_gain: float          # the open group's share of ``gain``
+
+
+class _PartitionSearch:
+    """Beam search over group-boundary partitions of one pattern chain.
+
+    Shared across segments so extras absorbed by a committed partition
+    stay unavailable to later segments (``self.absorbed``), and so the
+    explored-state count aggregates.
+    """
+
+    def __init__(self, graph: Graph, ctx: CostContext,
+                 base_covered: frozenset[int], width: int):
+        self.graph = graph
+        self.ctx = ctx
+        self.base = base_covered          # every plan-pattern member
+        self.width = width
+        self.absorbed: set[int] = set()   # extras committed by prior segments
+        self.states_explored = 0
+
+    def _covered(self, extra: frozenset[int]) -> set[int]:
+        return set(self.base) | self.absorbed | extra
+
+    def _group_gain(self, parts: tuple) -> float:
+        if len(parts) <= 1:
+            return 0.0
+        return self.ctx.stitch_gain(tuple(parts)).latency_gain_s
+
+    def _group_score(self, parts: tuple) -> float:
+        """Beam score of a (possibly open) group: its gain when it has a
+        feasible stitched schedule, else 0 -- an infeasible open group
+        is held optimistically (a later member may shrink its IO back
+        into feasibility) but valued as if split back into its parts,
+        which is exactly what ``_repair`` does if it never recovers."""
+        if len(parts) <= 1:
+            return 0.0
+        g = self.ctx.stitch_gain(tuple(parts))
+        return g.latency_gain_s if g.feasible else 0.0
+
+    # -- width-1: the original greedy forward merge -------------------------
+    def greedy(self, pats: list[frozenset[int]]
+               ) -> tuple[list[tuple], float]:
+        groups: list[tuple] = []
+        cur: list[frozenset[int]] = []
+        absorbed: frozenset[int] = frozenset()
+        for pat in pats:
+            if cur:
+                self.states_explored += 1
+                merged = _try_merge(self.graph, cur, pat, self.ctx,
+                                    self._covered(absorbed))
+                if merged is not None:
+                    cur = merged
+                    for p in merged:
+                        absorbed = absorbed | (p - self.base)
+                    continue
+                groups.append(tuple(cur))
+            cur = [pat]
+        if cur:
+            groups.append(tuple(cur))
+        return groups, sum(self._group_gain(g) for g in groups)
+
+    # -- width-N beam -------------------------------------------------------
+    def beam(self, pats: list[frozenset[int]],
+             pattern_set: set[frozenset[int]]
+             ) -> tuple[list[tuple], float]:
+        states = [_State((), (), frozenset(), 0.0, 0.0)]
+        for pat in pats:
+            nxt: dict[tuple, _State] = {}
+
+            def offer(s: _State) -> None:
+                self.states_explored += 1
+                key = (s.cur, s.absorbed)
+                old = nxt.get(key)
+                if old is None or s.gain > old.gain:
+                    nxt[key] = s
+
+            for s in states:
+                # close the open group, start a new one at ``pat``
+                closed = s.closed + ((s.cur,) if s.cur else ())
+                offer(_State(closed, (pat,), s.absorbed, s.gain, 0.0))
+                # extend the open group with ``pat``
+                if s.cur:
+                    merged = _try_merge(self.graph, list(s.cur), pat,
+                                        self.ctx, self._covered(s.absorbed),
+                                        require_gain=False)
+                    if merged is not None:
+                        cur = tuple(merged)
+                        absorbed = s.absorbed
+                        for p in merged:
+                            absorbed = absorbed | (p - self.base)
+                        g = self._group_score(cur)
+                        offer(_State(s.closed, cur, absorbed,
+                                     s.gain - s.cur_gain + g, g))
+            states = sorted(nxt.values(), key=lambda s: -s.gain)[:self.width]
+
+        best = max(states, key=lambda s: s.gain)
+        groups = list(best.closed) + ([best.cur] if best.cur else [])
+        return self._repair(groups, pattern_set)
+
+    def _repair(self, groups: list[tuple],
+                pattern_set: set[frozenset[int]]
+                ) -> tuple[list[tuple], float]:
+        """Split any group whose final schedule is infeasible or whose
+        gain is non-positive back into its pattern parts (the beam may
+        pass through such unions hoping for later growth; keeping one
+        would be worse than not stitching).  Absorbed extras of a split
+        group return to the leftover pool.
+        """
+        out: list[tuple] = []
+        total = 0.0
+        for g in groups:
+            if len(g) > 1:
+                sg = self.ctx.stitch_gain(tuple(g))
+                if not sg.feasible or sg.latency_gain_s <= 0.0:
+                    out.extend((p,) for p in g if p in pattern_set)
+                    continue
+                total += sg.latency_gain_s
+            out.append(tuple(g))
+        return out, total
+
+    # -- isomorphic-segment replay ------------------------------------------
+    def apply_shape(self, pats: list[frozenset[int]],
+                    shape: tuple[int, ...]) -> list[tuple] | None:
+        """Re-apply a searched partition (runs of consecutive patterns per
+        group) to an isomorphic segment; every merge is re-validated, so
+        a mismatch (differing leftovers, infeasible union) degrades to a
+        fresh search instead of a miscompile."""
+        if sum(shape) != len(pats):
+            return None
+        groups: list[tuple] = []
+        absorbed: frozenset[int] = frozenset()
+        i = 0
+        for run in shape:
+            cur = [pats[i]]
+            i += 1
+            for _ in range(run - 1):
+                self.states_explored += 1
+                merged = _try_merge(self.graph, cur, pats[i], self.ctx,
+                                    self._covered(absorbed),
+                                    require_gain=False)
+                if merged is None:
+                    return None
+                cur = merged
+                for p in merged:
+                    absorbed = absorbed | (p - self.base)
+                i += 1
+            if len(cur) > 1:
+                sg = self.ctx.stitch_gain(tuple(cur))
+                if not sg.feasible or sg.latency_gain_s <= 0.0:
+                    return None  # not profitable here: search this segment
+            groups.append(tuple(cur))
+        return groups
+
+    def commit(self, groups: list[tuple]) -> None:
+        """Make a chosen partition's absorbed extras unavailable to later
+        segments (mirrors the global ``covered`` of the greedy pass)."""
+        for g in groups:
+            for p in g:
+                self.absorbed |= set(p) - self.base
+
+
+def _shape_of(groups: list[tuple],
+              pattern_set: set[frozenset[int]]) -> tuple[int, ...]:
+    """Partition shape: patterns per group, in chain order (extras are
+    instance-specific and re-absorbed on replay)."""
+    return tuple(sum(1 for p in g if p in pattern_set) for g in groups)
+
+
+def _segments(graph: Graph, pats: list[frozenset[int]],
+              ctx: CostContext) -> list[list[frozenset[int]]]:
+    """Split the chain at structurally unmergeable adjacent pairs."""
+    segs: list[list[frozenset[int]]] = [[pats[0]]]
+    for prev, pat in zip(pats, pats[1:]):
+        if _pair_mergeable(graph, prev, pat, ctx):
+            segs[-1].append(pat)
+        else:
+            segs.append([pat])
+    return segs
 
 
 def _absorb_leftovers(graph: Graph, groups: list[list[frozenset[int]]],
@@ -137,41 +404,89 @@ def _absorb_leftovers(graph: Graph, groups: list[list[frozenset[int]]],
                 break
 
 
-def make_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
-                ctx: CostContext | None = None,
-                absorb_leftovers: bool = True) -> list[StitchGroup]:
-    """Partition the plan's patterns into stitch groups.
+def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
+                  ctx: CostContext | None = None,
+                  absorb_leftovers: bool = True,
+                  beam_width: int | None = None
+                  ) -> tuple[list[StitchGroup], StitchStats]:
+    """Partition the plan's patterns into stitch groups; return the groups
+    plus the search statistics.
 
-    Greedy forward pass over patterns in topological (min-member) order:
-    each pattern either extends the open group -- when the union is
-    convex (absorbing sandwiched leftover singletons if needed), has a
-    consistent row view, and ``stitch_gain`` prices the stitched union
-    faster than per-pattern kernels -- or closes it and opens a new one.
-    Unmerged patterns become singleton groups, so the result always
-    covers every plan pattern exactly once.
+    Patterns are walked in topological (min-member) order.  The chain is
+    split into segments at structurally unmergeable boundaries; each
+    segment's group partition is found by a ``beam_width``-wide beam
+    search (default ``$REPRO_STITCH_BEAM`` / 4; width 1 reproduces the
+    original greedy forward merge) and compared against the greedy
+    partition, keeping the better by total modeled gain -- a wider beam
+    is never worse under the cost model.  Segments isomorphic to an
+    already-searched one (equal per-pattern ``struct_key`` sequences)
+    replay its partition.  Unmerged patterns become singleton groups, so
+    the result always covers every plan pattern exactly once.
     """
     if ctx is None:
         ctx = CostContext(graph, hw)
+    width = max(1, int(beam_width if beam_width is not None
+                       else beam_width_from_env()))
     pats = sorted((p.members for p in plan.patterns), key=lambda m: min(m))
-    covered: set[int] = set()
+    stats = StitchStats(beam_width=width)
+    if not pats:
+        return [], stats
+
+    base_covered: frozenset[int] = frozenset()
     for m in pats:
-        covered |= m
+        base_covered |= m
+    pattern_set = set(pats)
+    search = _PartitionSearch(graph, ctx, base_covered, width)
 
+    segs = _segments(graph, pats, ctx)
+    stats.segments = len(segs)
+
+    shape_memo: dict[tuple, tuple[int, ...]] = {}
     groups: list[list[frozenset[int]]] = []
-    cur: list[frozenset[int]] = []
-    for pat in pats:
-        if cur:
-            merged = _try_merge(graph, cur, pat, ctx, covered)
-            if merged is not None:
-                cur = merged
-                for p in merged:
-                    covered |= p
-                continue
-            groups.append(cur)
-        cur = [pat]
-    if cur:
-        groups.append(cur)
+    for seg in segs:
+        seg_key = tuple(ctx.struct_key(p) for p in seg)
+        replayed: list[tuple] | None = None
+        if width > 1 and seg_key in shape_memo:
+            replayed = search.apply_shape(seg, shape_memo[seg_key])
+        # greedy always runs: it is the score floor (the chosen partition
+        # is never worse, replayed or searched) and stats.greedy_gain_s
+        # honestly reports what width-1 would have gained.
+        greedy_groups, greedy_gain = search.greedy(seg)
+        stats.greedy_gain_s += greedy_gain
+        if replayed is not None:
+            stats.segments_reused += 1
+            replay_gain = sum(search._group_gain(g) for g in replayed)
+            chosen = replayed if replay_gain >= greedy_gain \
+                else greedy_groups
+        elif width == 1:
+            chosen = greedy_groups
+        else:
+            beam_groups, beam_gain = search.beam(seg, pattern_set)
+            chosen = (beam_groups if beam_gain >= greedy_gain
+                      else greedy_groups)
+            shape_memo[seg_key] = _shape_of(chosen, pattern_set)
+        search.commit(chosen)
+        groups.extend(list(g) for g in chosen)
 
+    stats.states_explored = search.states_explored
+    stats.gain_s = sum(search._group_gain(tuple(g)) for g in groups)
+
+    covered: set[int] = set()
+    for g in groups:
+        for p in g:
+            covered |= p
     if absorb_leftovers:
         _absorb_leftovers(graph, groups, ctx, covered)
-    return [StitchGroup(tuple(g)) for g in groups]
+    return [StitchGroup(tuple(g)) for g in groups], stats
+
+
+def make_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
+                ctx: CostContext | None = None,
+                absorb_leftovers: bool = True,
+                beam_width: int | None = None) -> list[StitchGroup]:
+    """Partition the plan's patterns into stitch groups (compat wrapper
+    around ``search_groups``, discarding the search statistics)."""
+    groups, _ = search_groups(graph, plan, hw, ctx=ctx,
+                              absorb_leftovers=absorb_leftovers,
+                              beam_width=beam_width)
+    return groups

@@ -202,8 +202,11 @@ def test_plan_cache_rejects_stale_entry(tmp_path):
     entry = {"format": FORMAT_VERSION, "signature": "x",
              "patterns": [{"members": [99999]}]}
     assert entry_to_plan(entry, graph) is None        # unknown node
-    entry = {"format": FORMAT_VERSION - 1, "patterns": []}
-    assert entry_to_plan(entry, graph) is None        # version mismatch
+    entry = {"format": 1, "patterns": []}
+    assert entry_to_plan(entry, graph) is None        # unsupported version
+    # v2 is *supported* (degrades to re-tuning groups), not rejected
+    entry = {"format": 2, "signature": "x", "patterns": []}
+    assert entry_to_plan(entry, graph) is not None
 
 
 def test_plan_cache_tolerates_malformed_files_and_fields(tmp_path):
