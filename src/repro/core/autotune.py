@@ -28,12 +28,14 @@ from __future__ import annotations
 
 import os
 import time
+from dataclasses import dataclass, field
 
 import numpy as np
 
-from .codegen import emit_group, emit_pattern, pattern_emittable
+from .codegen import _override_estimate, emit_group, emit_pattern, \
+    pattern_emittable
 from .cost_model import BLOCK_ROWS, STREAM_TILES, Hardware, V5E
-from .ir import Graph
+from .ir import Graph, OpKind
 
 #: Env switch: "force" measures even without an accelerator (tests).
 ENV_AUTOTUNE = "REPRO_AUTOTUNE"
@@ -71,9 +73,28 @@ def _dummy_inputs(graph: Graph, ext_ids, rng) -> list:
             for i in ext_ids]
 
 
+def _sync_all(out) -> None:
+    """Block on EVERY output leaf, not just the container.
+
+    A timed sample that only synchronizes the last output (or trusts a
+    tuple to be synchronized as a unit) measures dispatch-queue depth on
+    asynchronous-dispatch backends, not kernel latency -- candidates
+    with more outputs would look faster.  Flatten and block each leaf
+    explicitly so every array the candidate produced has landed before
+    the clock stops.
+    """
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(out):
+        block = getattr(leaf, "block_until_ready", None)
+        if block is not None:
+            block()
+
+
 def _time_callable(fn, args, *, warmup: int = 1, iters: int = 3,
                    key=None) -> float:
-    """Best-of-``iters`` wall time of ``fn(*args)``.
+    """Best-of-``iters`` wall time of ``fn(*args)`` after ``warmup``
+    untimed calls (each fully synchronized, see ``_sync_all``).
 
     ``key`` identifies the candidate being measured (its override,
     hashable); it is unused here but lets tests monkeypatch this
@@ -81,15 +102,13 @@ def _time_callable(fn, args, *, warmup: int = 1, iters: int = 3,
     paths can be compared exactly.
     """
     del key
-    import jax
 
     for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
+        _sync_all(fn(*args))
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        _sync_all(fn(*args))
         best = min(best, time.perf_counter() - t0)
     return best
 
@@ -133,24 +152,34 @@ def _measure_serial(cands, graph: Graph, rng) -> dict | None:
 _SWEEP_COMPILER_OPTIONS = {"xla_backend_optimization_level": "0"}
 
 
-def _measure_batched(cands, graph: Graph, rng) -> dict | None:
-    """Batched sweep: all candidates lower in ONE ``jax.jit`` pass.
+def _measure_switch_branches(fns, args, keys,
+                             rep_of: dict[int, int] | None = None
+                             ) -> list[float | None] | None:
+    """The shared batched measurement pipeline: compile every callable
+    as a branch of ONE jitted ``lax.switch``, then screen + refine.
 
-    The candidates become branches of a single ``lax.switch`` selected
-    by a *traced* index, so the whole sweep is traced, lowered and
-    compiled exactly once (every branch compiles inside that one XLA
-    program) and the dummy inputs are built once and shared.  Each
-    candidate is then timed by re-dispatching the compiled executable
-    with its branch index -- the constant switch overhead cancels in
-    the comparison.  Candidate callables all take the union's external
-    inputs and return its outputs, so the branch signatures agree by
-    construction.
+    The branches are selected by a *traced* index, so the whole sweep
+    is traced, lowered and compiled exactly once (every branch compiles
+    inside that one XLA program) and the dummy inputs are shared.  The
+    screening pass takes one timed dispatch per branch after one
+    *per-branch* warmup call -- the executable is compiled, but branch
+    k's first dispatch still pays one-time costs (branch-local constant
+    uploads, allocator warm paths) and, on asynchronous-dispatch
+    backends, whatever is still draining from the previous branch;
+    timing it cold ranks candidates by dispatch-queue depth, not kernel
+    latency.  Only the two front-runners get the full min-of-k
+    refinement.  ``keys[k]`` is branch k's ``_time_callable`` seam key;
+    ``rep_of`` (branch -> representative branch) lets structurally
+    isomorphic branches share one measurement.  Returns per-branch best
+    times (None: that branch failed to time), or None when the batch
+    itself failed to compile/warm -- the caller falls back to its
+    serial path.
     """
     import jax
     from jax import lax
 
-    fns = [em.fn for _, em in cands]
-    args = _dummy_inputs(graph, cands[0][1].ext_ids, rng)
+    if rep_of is None:
+        rep_of = {k: k for k in range(len(fns))}
     if len(fns) == 1:
         sweep_fn = jax.jit(lambda i, *a: fns[0](*a))
     else:
@@ -161,35 +190,44 @@ def _measure_batched(cands, graph: Graph, rng) -> dict | None:
             sweep = lowered.compile(compiler_options=_SWEEP_COMPILER_OPTIONS)
         except Exception:  # noqa: BLE001 - options unknown to this backend
             sweep = lowered.compile()
-        jax.block_until_ready(sweep(0, *args))
+        _sync_all(sweep(0, *args))
     except Exception:  # noqa: BLE001 - a bad branch poisons the batch
-        return _measure_serial(cands, graph, rng)
-    # screening pass: one timed dispatch per branch.  The executable is
-    # already compiled (no per-call tracing jitter), so a single sample
-    # ranks candidates reliably; only the two front-runners get the
-    # full min-of-k treatment before the final pick.
-    screened: list[tuple[float, int]] = []
-    for k, (over, _em) in enumerate(cands):
+        return None
+    screened: dict[int, float] = {}
+    for k in sorted(set(rep_of.values())):
         try:
-            t = _time_callable(lambda *a, _k=k: sweep(_k, *a), args,
-                               warmup=0, iters=1,
-                               key=tuple(sorted(over.items())))
+            screened[k] = _time_callable(
+                lambda *a, _k=k: sweep(_k, *a), args,
+                warmup=1, iters=1, key=keys[k])
         except Exception:  # noqa: BLE001
             continue
-        screened.append((t, k))
     if not screened:
         return None
-    screened.sort()
-    best_t, best_over = float("inf"), None
-    for t1, k in screened[:2]:
+    for k in sorted(screened, key=screened.get)[:2]:  # top-2 refinement
         try:
-            t = min(t1, _time_callable(
-                lambda *a, _k=k: sweep(_k, *a), args, warmup=0, iters=2,
-                key=tuple(sorted(cands[k][0].items()))))
+            screened[k] = min(screened[k], _time_callable(
+                lambda *a, _k=k: sweep(_k, *a), args,
+                warmup=1, iters=2, key=keys[k]))
         except Exception:  # noqa: BLE001
-            t = t1
-        if t < best_t:
-            best_t, best_over = t, cands[k][0]
+            pass
+    return [screened.get(rep_of[k]) for k in range(len(fns))]
+
+
+def _measure_batched(cands, graph: Graph, rng) -> dict | None:
+    """Batched schedule sweep over one kernel's candidate overrides:
+    ``_measure_switch_branches`` over the emitted candidates (shared
+    dummy inputs; branch signatures agree by construction since every
+    candidate takes the union's external inputs and returns its
+    outputs), falling back to the serial loop on a poisoned batch."""
+    args = _dummy_inputs(graph, cands[0][1].ext_ids, rng)
+    keys = [tuple(sorted(over.items())) for over, _em in cands]
+    times = _measure_switch_branches([em.fn for _, em in cands], args, keys)
+    if times is None:
+        return _measure_serial(cands, graph, rng)
+    best_t, best_over = float("inf"), None
+    for (over, _em), t in zip(cands, times):
+        if t is not None and t < best_t:
+            best_t, best_over = t, over
     return best_over
 
 
@@ -257,3 +295,305 @@ def tune_group(graph: Graph, parts, *, hw: Hardware = V5E,
                           ctx=ctx, schedule_override=over)
 
     return _sweep(info, emit, graph, batch_compile=batch_compile)
+
+
+# ---------------------------------------------------------------------------
+# joint partition x schedule tuning (paper: tune the stitching *scheme*)
+# ---------------------------------------------------------------------------
+#: Hard cap on (partition, schedule-assignment) branches in one sweep:
+#: every branch is a whole-partition program, so the switch's compile
+#: time grows with each one.  All-analytic assignments are kept first;
+#: excess per-group schedule swaps are dropped.
+MAX_PARTITION_BRANCHES = 32
+
+
+@dataclass
+class PartitionTuneResult:
+    """Outcome of racing candidate partitions on silicon."""
+
+    index: int                   # winning candidate (rank in model order)
+    overrides: list[dict]        # per-group schedule pin for the winner
+                                 # ({} = the analytic pick)
+    measured_s: list[float] = field(default_factory=list)
+    # best measured wall time per candidate (inf: never timed)
+    branches: int = 0            # (partition, assignment) pairs raced
+
+
+def _alt_schedule_override(graph, union, info, ctx, hw) -> dict | None:
+    """The best-priced feasible override from the schedule family the
+    analytic model did NOT pick (onepass <-> streaming) -- the coarse
+    schedule axis that can flip a partition comparison on silicon.  The
+    fine tile sweep within the winning family stays ``tune_group``'s
+    job after the partition is committed."""
+    from .cost_model import best_estimate
+
+    best = ctx.best(union) if ctx is not None \
+        else best_estimate(graph, union, hw)
+    alt = {"onepass": "streaming", "streaming": "onepass"}.get(best.schedule)
+    if alt is None or info is None:
+        return None
+    pick: tuple[dict, float] | None = None
+    for over in _candidate_overrides(info):
+        if over["schedule"] != alt:
+            continue
+        est = _override_estimate(graph, union, info, over, hw, ctx=ctx)
+        if est is None:
+            continue
+        if pick is None or est.latency_s < pick[1]:
+            pick = (over, est.latency_s)
+    return pick[0] if pick else None
+
+
+def _region_schedule(graph: Graph, region: frozenset[int],
+                     kernels: list) -> list[tuple[str, int]] | None:
+    """Dependency-ordered execution plan of ``region`` for one candidate:
+    group kernels plus the region nodes this candidate leaves bare
+    (nodes another candidate absorbs into a kernel).  Returns None on a
+    dependence cycle (defensive; convex groups cannot produce one)."""
+    member_of: dict[int, int] = {}
+    for k, (em, members) in enumerate(kernels):
+        for nid in members:
+            member_of[nid] = k
+    sched: list[tuple[str, int]] = []
+    done: set[int] = set()
+    pending_nodes = [n for n in sorted(region) if n not in member_of]
+    pending_kernels = list(range(len(kernels)))
+    while pending_nodes or pending_kernels:
+        progressed = False
+        keep_n: list[int] = []
+        for nid in pending_nodes:
+            if all(i not in region or i in done
+                   for i in graph.node(nid).inputs):
+                sched.append(("node", nid))
+                done.add(nid)
+                progressed = True
+            else:
+                keep_n.append(nid)
+        pending_nodes = keep_n
+        keep_k: list[int] = []
+        for k in pending_kernels:
+            em, members = kernels[k]
+            if all(e not in region or e in done for e in em.ext_ids):
+                sched.append(("kernel", k))
+                done.update(members)
+                progressed = True
+            else:
+                keep_k.append(k)
+        pending_kernels = keep_k
+        if not progressed:
+            return None
+    return sched
+
+
+def _partition_runner(graph: Graph, sched, kernels,
+                      ext_ids: list[int], out_ids: list[int]):
+    """Closure executing one candidate's region program: group kernels
+    in dependency order, bare nodes via ``bind_node`` -- the same shape
+    as ``stitch._Compiled._run_schedule`` restricted to the region, so
+    every branch of the partition sweep maps the region's external
+    inputs to the identical output tuple."""
+    from .tracer import bind_node
+
+    def runner(*ext_vals):
+        env = dict(zip(ext_ids, ext_vals))
+        for kind, item in sched:
+            if kind == "node":
+                node = graph.node(item)
+                if node.kind is OpKind.CONST:
+                    env[item] = node.value
+                    continue
+                ins = [env[i] if i in env else graph.node(i).value
+                       for i in node.inputs]
+                env[item] = bind_node(node, ins)
+            else:
+                em = kernels[item][0]
+                outs = em.fn(*[env[i] for i in em.ext_ids])
+                for oid, val in zip(em.out_ids, outs):
+                    env[oid] = val
+        return tuple(env[o] for o in out_ids)
+
+    return runner
+
+
+@dataclass
+class _Branch:
+    ci: int                      # candidate partition index
+    assignment: dict             # group index -> schedule override
+    runner: object               # region program for this assignment
+    mkey: tuple                  # structural measurement key (iso dedup)
+    tkey: tuple                  # _time_callable seam key
+
+
+def _branch_tkey(ci: int, assignment: dict) -> tuple:
+    return ("partition", ci,
+            tuple(sorted((gi, tuple(sorted(over.items())))
+                         for gi, over in assignment.items())))
+
+
+def _candidate_branches(graph: Graph, ci: int, groups, region, ext_ids,
+                        out_ids, ctx, hw, interpret: bool,
+                        emit_cache: dict) -> list[_Branch]:
+    """All (this partition, schedule-assignment) branches: the
+    all-analytic assignment first, then one swap per stitched group
+    into the opposite schedule family's best-priced override."""
+    def emitted_for(grp, over: dict | None):
+        key = (grp.members, tuple(sorted((over or {}).items())))
+        if key not in emit_cache:
+            em = emit_group(graph, grp.parts, hw=hw, interpret=interpret,
+                            ctx=ctx, schedule_override=over or None)
+            if over and em.estimate.schedule != over.get("schedule"):
+                em = None  # emitter fell back: not the asked-for schedule
+            emit_cache[key] = em
+        return emit_cache[key]
+
+    def build(assignment: dict) -> _Branch | None:
+        kernels = []
+        mkey_parts = []
+        for gi, grp in enumerate(groups):
+            over = assignment.get(gi)
+            em = emitted_for(grp, over)
+            if em is None:
+                return None
+            kernels.append((em, grp.members))
+            mkey_parts.append((ctx.struct_key(grp.members),
+                               tuple(sorted((over or {}).items()))))
+        sched = _region_schedule(graph, region, kernels)
+        if sched is None:
+            return None
+        bare = tuple(sorted(n for n in region
+                            if all(n not in m for _, m in kernels)))
+        mkey = (tuple(mkey_parts),
+                tuple(ctx.struct_key(frozenset({n})) for n in bare))
+        runner = _partition_runner(graph, sched, kernels, ext_ids, out_ids)
+        return _Branch(ci, assignment, runner, mkey,
+                       _branch_tkey(ci, assignment))
+
+    out: list[_Branch] = []
+    try:
+        base = build({})
+    except Exception:  # noqa: BLE001 - unemittable candidate just loses
+        return out
+    if base is None:
+        return out
+    out.append(base)
+    for gi, grp in enumerate(groups):
+        if not grp.stitched:
+            continue
+        try:
+            over = _alt_schedule_override(graph, grp.members,
+                                          ctx.info(grp.members), ctx, hw)
+            if over is None:
+                continue
+            br = build({gi: over})
+        except Exception:  # noqa: BLE001
+            continue
+        if br is not None:
+            out.append(br)
+    return out
+
+
+def tune_partitions(graph: Graph, candidates, *, hw: Hardware = V5E,
+                    interpret: bool = True, ctx=None,
+                    batch_compile: bool = True
+                    ) -> PartitionTuneResult | None:
+    """Race candidate partitions (each a list of ``StitchGroup``) on
+    silicon; return the measured winner and its schedule assignment.
+
+    The branch space is every (partition, candidate-schedule) pair:
+    each candidate contributes its all-analytic assignment plus one
+    swap per stitched group into the opposite schedule family.  All
+    branches lower as ONE jitted ``lax.switch`` over a shared *region*
+    program -- the union of every candidate's members, with nodes a
+    candidate does not cover executed bare -- so every branch takes the
+    same inputs and returns the same outputs and a single compile
+    covers the whole sweep (``batch_compile=False`` keeps the serial
+    loop as the equivalence oracle).  Screening (one warmed sample per
+    branch) plus top-2 refinement picks the winner; structurally
+    isomorphic branches (equal per-group ``struct_key`` + override
+    sequences) are measured once.  Returns None when nothing could be
+    measured -- the caller falls back to the cost-model ranking.
+    """
+    if ctx is None:
+        from .costctx import CostContext
+
+        ctx = CostContext(graph, hw)
+    candidates = [list(c) for c in candidates]
+    if not candidates or not candidates[0]:
+        return None
+
+    region: frozenset[int] = frozenset()
+    for groups in candidates:
+        for grp in groups:
+            region |= grp.members
+    b = ctx.bounds(region)
+    ext_ids = [i for i in b.inputs
+               if graph.node(i).kind is not OpKind.CONST]
+    out_ids = list(b.outputs)
+
+    emit_cache: dict = {}
+    branches: list[_Branch] = []
+    for ci, groups in enumerate(candidates):
+        branches.extend(_candidate_branches(
+            graph, ci, groups, region, ext_ids, out_ids, ctx, hw,
+            interpret, emit_cache))
+    if not branches:
+        return None
+    if len(branches) > MAX_PARTITION_BRANCHES:
+        # keep every all-analytic assignment, then swaps in order
+        base = [br for br in branches if not br.assignment]
+        swaps = [br for br in branches if br.assignment]
+        branches = (base + swaps)[:MAX_PARTITION_BRANCHES]
+
+    rng = np.random.default_rng(0)
+    args = _dummy_inputs(graph, ext_ids, rng)
+    times = _measure_partition_branches(branches, args,
+                                        batch_compile=batch_compile)
+    if times is None:
+        return None
+
+    measured_s = [float("inf")] * len(candidates)
+    best_k = -1
+    for k, t in enumerate(times):
+        if t is None:
+            continue
+        ci = branches[k].ci
+        if t < measured_s[ci]:
+            measured_s[ci] = t
+        if best_k < 0 or t < times[best_k]:
+            best_k = k
+    if best_k < 0:
+        return None
+    win = branches[best_k]
+    overrides = [dict(win.assignment.get(gi, {}))
+                 for gi in range(len(candidates[win.ci]))]
+    return PartitionTuneResult(index=win.ci, overrides=overrides,
+                               measured_s=measured_s,
+                               branches=len(branches))
+
+
+def _measure_partition_branches(branches: list[_Branch], args, *,
+                                batch_compile: bool
+                                ) -> list[float | None] | None:
+    """Per-branch best wall time (None: branch failed to measure).
+    Isomorphic branches (equal ``mkey``) share one measurement."""
+    rep_by_mkey: dict[tuple, int] = {}
+    for k, br in enumerate(branches):
+        rep_by_mkey.setdefault(br.mkey, k)
+    rep_of = {k: rep_by_mkey[br.mkey] for k, br in enumerate(branches)}
+
+    if batch_compile:
+        times = _measure_switch_branches([br.runner for br in branches],
+                                         args, [br.tkey for br in branches],
+                                         rep_of=rep_of)
+        if times is not None:
+            return times
+        # a poisoned batch falls through to the serial loop
+
+    timed: dict[int, float | None] = {}
+    for k in set(rep_of.values()):
+        br = branches[k]
+        try:
+            timed[k] = _time_callable(br.runner, args, key=br.tkey)
+        except Exception:  # noqa: BLE001
+            timed[k] = None
+    return [timed.get(rep_of[k]) for k in range(len(branches))]

@@ -186,6 +186,66 @@ def _alias_map(graph: Graph, info: RowInfo, ext_ids: list[int],
     return aliases or None
 
 
+def _alias_map_streaming(graph: Graph, info: RowInfo, ext_ids: list[int],
+                         out_ids: list[int],
+                         donate_into: "frozenset[int] | None",
+                         block_cols: int, phases: int
+                         ) -> dict[int, int] | None:
+    """Phase-aware alias legality for the streaming schedule.
+
+    The streaming grid is ``(row_blocks, phases, col_tiles)`` with the
+    trailing axes sequential and the column axis fastest.  The hazard
+    is not only the kernel's own final-phase store: Pallas flushes an
+    output window back to HBM whenever its block index *changes*
+    between grid cells, including after cells where the kernel never
+    stored to the ref (the ``pl.when(p == phases - 1)`` gate).  With
+    ``input_output_aliases`` such a flush lands on the aliased input's
+    block, which later phases re-read.  Donation is therefore legal
+    only when every read of the aliased input's block precedes the
+    first possible write-back of the aliased output's block:
+
+      * FULL -> FULL with ``phases == 1``: each ``(i, j)`` tile is
+        visited exactly once; the read precedes the same cell's write.
+      * FULL -> FULL or ROW -> ROW with one column tile: the output
+        block index is pinned across the whole phase axis of row block
+        ``i``, so its write-back is deferred until the grid advances
+        to row ``i + 1`` -- after every phase has re-read the input.
+      * FULL -> FULL with ``phases > 1`` *and* several column tiles is
+        refused: the out block index changes every cell, so phase 0's
+        unwritten-window flush would clobber input tiles that phase 1
+        still reads.  Likewise ROW -> ROW across several column tiles
+        (the pinned ``(i, 0)`` block is re-read at ``j >= 1`` after
+        the final phase's first write).
+      * COL / scalar operands pad to a different leading dim entirely.
+    """
+    if not donate_into:
+        return None
+    n_col_tiles = math.ceil(info.C / max(1, min(block_cols, info.C)))
+    aliases: dict[int, int] = {}
+    used: set[int] = set()
+    for i, e in enumerate(ext_ids):
+        if e not in donate_into:
+            continue
+        role = info.roles.get(e)
+        if role is Role.FULL:
+            if phases > 1 and n_col_tiles > 1:
+                continue  # unwritten-window flush precedes later reads
+        elif role is Role.ROW:
+            if n_col_tiles > 1:
+                continue  # pinned block re-read after the first write
+        else:
+            continue
+        for j, o in enumerate(out_ids):
+            if j in used:
+                continue
+            if (info.roles[o] is role
+                    and graph.node(o).spec.dtype == graph.node(e).spec.dtype):
+                aliases[i] = j
+                used.add(j)
+                break
+    return aliases or None
+
+
 def emit_pattern(graph: Graph, pattern: frozenset[int], *,
                  hw: Hardware = V5E, interpret: bool = True,
                  force_packed: bool = False, ctx=None,
@@ -226,13 +286,21 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
         if est.schedule == "streaming":
             # the estimate carries the column tile (analytic sweep, tuned
             # override or plan-cache entry alike -- no side-channel)
+            from .cost_model import reduce_levels
+            phases = max(reduce_levels(graph, pattern).values(),
+                         default=0) + 1
+            aliases = _alias_map_streaming(graph, info, ext_ids, out_ids,
+                                           donate_into,
+                                           est.block_cols or 2048, phases)
             fn = _emit_pallas_streaming(graph, pattern, info,
                                         est.block_rows, ext_ids, out_ids,
                                         interpret=interpret,
-                                        block_cols=est.block_cols or 2048)
+                                        block_cols=est.block_cols or 2048,
+                                        io_aliases=aliases)
             return Emitted(fn, "pallas", est, ext_ids, out_ids,
                            scratch.total_bytes, scratch.naive_bytes,
-                           parts=(tuple(sorted(pattern)),))
+                           parts=(tuple(sorted(pattern)),),
+                           io_aliases=aliases)
 
     fn = _emit_packed(graph, pattern, ext_ids, out_ids)
     if est.schedule in ("onepass", "streaming"):  # emitter gap: packed
@@ -308,11 +376,17 @@ def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
                               out_ids, interpret=interpret, order=order,
                               staged=staged, io_aliases=aliases)
         else:
+            from .cost_model import reduce_levels
+            phases = max(reduce_levels(graph, union).values(),
+                         default=0) + 1
+            aliases = _alias_map_streaming(graph, info, ext_ids, out_ids,
+                                           donate_into,
+                                           est.block_cols or 2048, phases)
             fn = _emit_pallas_streaming(graph, union, info, est.block_rows,
                                         ext_ids, out_ids,
                                         interpret=interpret,
                                         block_cols=est.block_cols or 2048,
-                                        order=order)
+                                        order=order, io_aliases=aliases)
         return Emitted(fn, "pallas", est, ext_ids, out_ids,
                        scratch.total_bytes, scratch.naive_bytes,
                        parts=parts, hbm_saved=hbm_saved,
@@ -342,7 +416,9 @@ def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
                            info: RowInfo, block_rows: int,
                            ext_ids: list[int], out_ids: list[int], *,
                            interpret: bool, block_cols: int = 2048,
-                           order: list[int] | None = None) -> Callable:
+                           order: list[int] | None = None,
+                           io_aliases: dict[int, int] | None = None
+                           ) -> Callable:
     """Streaming multi-phase kernel (warp-composition analogue, §4.1).
 
     Grid (row_blocks, phases, col_tiles); the two trailing axes iterate
@@ -446,9 +522,8 @@ def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
 
         @pl.when(p == phases - 1)
         def _write():
-            for ref, oid, role in zip(out_refs, out_ids, out_roles):
-                width = bc if role in (Role.FULL, Role.COL) else 1
-                ref[...] = jnp.broadcast_to(env[oid], (br, width)).astype(
+            for ref, oid in zip(out_refs, out_ids):
+                ref[...] = jnp.broadcast_to(env[oid], ref.shape).astype(
                     ref.dtype)
 
     in_specs = []
@@ -468,6 +543,10 @@ def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
         if role is Role.FULL:
             out_specs.append(pl.BlockSpec((br, bc), lambda i, p, j: (i, j)))
             out_shapes.append(jax.ShapeDtypeStruct((Rp, Cp), node.spec.dtype))
+        elif role is Role.COL:
+            # per-column values: every row block writes the same block
+            out_specs.append(pl.BlockSpec((1, bc), lambda i, p, j: (0, j)))
+            out_shapes.append(jax.ShapeDtypeStruct((1, Cp), node.spec.dtype))
         else:
             out_specs.append(pl.BlockSpec((br, 1), lambda i, p, j: (i, 0)))
             out_shapes.append(jax.ShapeDtypeStruct((Rp, 1), node.spec.dtype))
@@ -480,6 +559,7 @@ def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
         out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
         out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
         scratch_shapes=[pltpu.VMEM((br, 1), jnp.float32) for _ in reduces],
+        input_output_aliases=dict(io_aliases or {}),
         interpret=interpret,
     )
 
@@ -503,9 +583,15 @@ def _emit_pallas_streaming(graph: Graph, pattern: frozenset[int],
             res = (res,)
         outs = []
         for o, r in zip(out_ids, res):
-            r = r[:R]
-            if roles[o] is Role.FULL:
-                r = r[:, :C]
+            role = roles[o]
+            if role is Role.FULL:
+                r = r[:R, :C]
+            elif role is Role.COL:
+                r = r[:1, :C]
+            elif role is Role.SCALAR:
+                r = r[:1, :1]
+            else:
+                r = r[:R]
             outs.append(r.reshape(out_orig[o]))
         return tuple(outs)
 
@@ -675,7 +761,16 @@ def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
             res = (res,)
         outs = []
         for o, r in zip(out_ids, res):
-            r = r[:R]
+            role = roles[o]
+            # COL/scalar outputs are written identically by every row
+            # block (the kernel broadcasts them over the block): slice
+            # one copy back out instead of R of them.
+            if role is Role.COL:
+                r = r[:1]
+            elif role is Role.SCALAR:
+                r = r[:1, :1]
+            else:
+                r = r[:R]
             outs.append(r.reshape(out_orig_shapes[o]))
         return tuple(outs)
 

@@ -320,6 +320,29 @@ def stitch_gain(graph: Graph, parts, hw: Hardware = V5E,
     )
 
 
+def partition_gain(graph: Graph, partition, hw: Hardware = V5E,
+                   ctx=None) -> float:
+    """Total modeled stitch gain of a whole candidate partition.
+
+    ``partition`` is a sequence of groups, each a sequence of member
+    patterns.  This is the quantity the top-k partition search ranks
+    candidates by: the sum of ``stitch_gain`` over the stitched groups
+    (singleton groups contribute zero; an infeasible group -- which the
+    search's repair pass should have split -- contributes zero rather
+    than poisoning the ranking with a meaningless negative).
+    """
+    total = 0.0
+    for parts in partition:
+        parts = tuple(frozenset(p) for p in parts)
+        if len(parts) <= 1:
+            continue
+        g = (ctx.stitch_gain(parts) if ctx is not None
+             else stitch_gain(graph, parts, hw))
+        if g.feasible:
+            total += g.latency_gain_s
+    return total
+
+
 # ---------------------------------------------------------------------------
 # delta-evaluator
 # ---------------------------------------------------------------------------

@@ -79,6 +79,7 @@ class CostContext:
         self._sig_intern: dict[tuple, int] = {}
         self._convex: dict[frozenset[int], bool] = {}
         self._stitch_gain: dict[tuple, object] = {}  # parts tuple -> StitchGain
+        self._partition_gain: dict[tuple, float] = {}  # partition fp -> gain
 
     # -- structural queries --------------------------------------------------
     def is_convex(self, pattern: frozenset[int]) -> bool:
@@ -278,6 +279,22 @@ class CostContext:
 
             got = stitch_gain(self.graph, key, self.hw, ctx=self)
             self._stitch_gain[key] = got
+        return got
+
+    def partition_gain(self, partition) -> float:
+        """Memoized whole-partition gain (``cost_model.partition_gain``).
+
+        The top-k search re-ranks overlapping candidate partitions (the
+        winner plus its single-segment swaps share most groups); the
+        per-group gains are memoized via ``stitch_gain``, this memoizes
+        the candidate-level sum keyed by the partition fingerprint."""
+        key = tuple(tuple(frozenset(p) for p in g) for g in partition)
+        got = self._partition_gain.get(key)
+        if got is None:
+            from .cost_model import partition_gain
+
+            got = partition_gain(self.graph, key, self.hw, ctx=self)
+            self._partition_gain[key] = got
         return got
 
 

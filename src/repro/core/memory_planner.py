@@ -184,6 +184,31 @@ def plan_staged_buffers(graph: Graph, roles, scratch_plan:
     return staged_slot, buffers
 
 
+def plan_partition_scratch(graph: Graph, partition, info_of
+                           ) -> "list[GroupScratchPlan | None]":
+    """Scratch plans for every group of one *candidate* partition.
+
+    ``partition`` is a sequence of groups, each a sequence of member
+    patterns; ``info_of`` maps a union frozenset to its ``RowInfo`` (or
+    None -- e.g. ``CostContext.info``).  The top-k partition tuner uses
+    this to compare candidates by staged VMEM footprint before spending
+    silicon time on them; a group with no row view maps to None (it
+    would emit as a packed kernel with no explicit scratch).
+    """
+    plans: "list[GroupScratchPlan | None]" = []
+    for parts in partition:
+        parts_fs = tuple(frozenset(p) for p in parts)
+        union: frozenset[int] = frozenset()
+        for p in parts_fs:
+            union |= p
+        info = info_of(union)
+        if info is None:
+            plans.append(None)
+            continue
+        plans.append(plan_group_scratch(graph, parts_fs, info))
+    return plans
+
+
 def plan_group_scratch(graph: Graph, parts, info: RowInfo) -> GroupScratchPlan:
     """``plan_scratch`` extended to span patterns: one allocation over the
     concatenated member order, plus the staged-interface accounting the

@@ -33,6 +33,7 @@ import hashlib
 import json
 import os
 import tempfile
+import time
 
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, Pattern, StitchGroup
 
@@ -45,6 +46,14 @@ ENV_MAX = "REPRO_PLAN_CACHE_MAX"
 #: Default entry bound when ``$REPRO_PLAN_CACHE_MAX`` is unset.
 DEFAULT_MAX_ENTRIES = 512
 
+#: Environment variable overriding the eviction grace window (seconds).
+ENV_GRACE = "REPRO_PLAN_CACHE_GRACE"
+
+#: Entries touched within this many seconds are immune from eviction:
+#: a concurrent process that just stored (or touch-on-load refreshed)
+#: an entry must not lose it to an evictor ranking by a stale mtime.
+DEFAULT_EVICT_GRACE_S = 30.0
+
 #: Bump when the entry layout or planner semantics change incompatibly.
 #: v2: stitch groups (group membership + group schedules) + planner-side
 #: MAX_PATTERN coalesce bound changed plan granularity.
@@ -53,10 +62,16 @@ DEFAULT_MAX_ENTRIES = 512
 #: and group-composition sections are unchanged -- but their group
 #: schedules are dropped, degrading to re-tuning (or the analytic
 #: sweep) instead of erroring; the upgraded entry is written back.
-FORMAT_VERSION = 3
+#: v4: measured *partition* choice (top-level ``partition_source``
+#: marker) from the top-k partition tuner.  v3 entries still load --
+#: plan, groups and tuned group schedules are unchanged -- but their
+#: partition was never raced against the runner-up candidates, so an
+#: autotuning process degrades to re-measuring the partition and
+#: upgrades the entry in place, mirroring the v2 -> v3 path.
+FORMAT_VERSION = 4
 
 #: Formats ``entry_to_plan`` / ``entry_to_groups`` still understand.
-SUPPORTED_FORMATS = (2, FORMAT_VERSION)
+SUPPORTED_FORMATS = (2, 3, FORMAT_VERSION)
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +94,9 @@ def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
     # signatures are stable across format bumps so an old-format entry
     # can be found and degraded (v2 -> re-tune) instead of orphaned.
     # v3 itself rotated signatures once by adding the stitch beam width.
+    # REPRO_STITCH_TOPK is likewise unhashed: it only widens the set of
+    # measurement candidates, and hashing it would orphan every v3
+    # entry the v3 -> v4 degrade path exists to rescue.
     w("hw", hw.peak_bf16_flops, hw.hbm_bw, hw.vpu_ops, hw.vmem_bytes,
       hw.launch_s, hw.hbm_latency_s)
     w("knobs", TOP_K, MAX_GROUP, MAX_PATTERN, BEAM_WIDTH, remote_fusion,
@@ -100,12 +118,17 @@ def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
 def plan_to_entry(plan: FusionPlan, schedules: list[dict],
                   signature: str,
                   groups: "list[StitchGroup] | None" = None,
-                  group_schedules: list[dict] | None = None) -> dict:
+                  group_schedules: list[dict] | None = None,
+                  partition_source: str | None = None) -> dict:
     """Serialize a chosen plan + per-pattern schedule picks.
 
     ``groups`` (with per-group ``group_schedules``) additionally records
     the stitch-group composition: each group names the plan patterns it
     fuses by index plus any absorbed leftover singletons by node id.
+    ``partition_source`` records how the group *partition* was chosen
+    (``"model"``: cost-model ranking; ``"measured"``: the top-k
+    candidates were raced on silicon) -- a later autotuning process
+    trusts a measured partition and re-races a modeled one.
     """
     entry = {
         "format": FORMAT_VERSION,
@@ -115,6 +138,8 @@ def plan_to_entry(plan: FusionPlan, schedules: list[dict],
             for pat, sched in zip(plan.patterns, schedules)
         ],
     }
+    if partition_source in ("model", "measured"):
+        entry["partition_source"] = partition_source
     if groups is not None:
         index_of = {pat.members: i for i, pat in enumerate(plan.patterns)}
         recs = []
@@ -239,6 +264,19 @@ def entry_to_groups(entry: dict, plan: FusionPlan, graph: Graph
     return [groups[k] for k in order], [overrides[k] for k in order]
 
 
+def entry_partition_source(entry: dict) -> str:
+    """How the entry's stored group partition was chosen.
+
+    Only the current format records the marker; older formats predate
+    partition racing, so their partitions count as model-chosen and an
+    autotuning loader degrades to re-measuring the top-k candidates.
+    """
+    if isinstance(entry, dict) and entry.get("format") == FORMAT_VERSION \
+            and entry.get("partition_source") == "measured":
+        return "measured"
+    return "model"
+
+
 def _sanitize_override(rec: dict) -> dict:
     """Keep only well-typed schedule fields; a malformed override must
     degrade to the analytic sweep, not crash emission."""
@@ -264,7 +302,8 @@ class PlanCache:
     bound across deployed model revisions.
     """
 
-    def __init__(self, root: str, max_entries: int | None = None):
+    def __init__(self, root: str, max_entries: int | None = None,
+                 evict_grace_s: float | None = None):
         self.root = root
         if max_entries is None:
             try:
@@ -273,6 +312,13 @@ class PlanCache:
             except ValueError:
                 max_entries = DEFAULT_MAX_ENTRIES
         self.max_entries = max(1, max_entries)
+        if evict_grace_s is None:
+            try:
+                evict_grace_s = float(os.environ.get(ENV_GRACE,
+                                                     DEFAULT_EVICT_GRACE_S))
+            except ValueError:
+                evict_grace_s = DEFAULT_EVICT_GRACE_S
+        self.evict_grace_s = max(0.0, evict_grace_s)
 
     @classmethod
     def from_env(cls) -> "PlanCache | None":
@@ -309,16 +355,45 @@ class PlanCache:
         self._evict()
 
     def _evict(self) -> None:
-        """Drop the oldest entries beyond ``max_entries`` (best-effort)."""
+        """Drop the oldest entries beyond ``max_entries`` (best-effort).
+
+        Eviction races concurrent stores and touch-on-load refreshes:
+        between listing the directory and unlinking, another process may
+        have (re)written the very entry this process ranked as oldest.
+        Two guards close the window: entries whose mtime is within
+        ``evict_grace_s`` of now are never evicted (a just-stored entry
+        cannot be the LRU victim of a stale listing), and each victim's
+        mtime is re-checked immediately before the unlink -- if it moved
+        since the listing, the entry was touched concurrently and is
+        skipped.  The count may transiently exceed ``max_entries``; the
+        next store past the grace window evicts the remainder.
+        """
         try:
-            paths = [os.path.join(self.root, name)
-                     for name in os.listdir(self.root)
-                     if name.endswith(".json")]
-            excess = len(paths) - self.max_entries
+            now = time.time()
+            aged: list[tuple[float, str]] = []
+            for name in os.listdir(self.root):
+                if not name.endswith(".json"):
+                    continue
+                path = os.path.join(self.root, name)
+                try:
+                    aged.append((os.path.getmtime(path), path))
+                except OSError:
+                    continue  # vanished under a concurrent evictor
+            excess = len(aged) - self.max_entries
             if excess <= 0:
                 return
-            paths.sort(key=lambda p: os.path.getmtime(p))
-            for p in paths[:excess]:
-                os.unlink(p)
+            aged.sort()
+            for mtime, path in aged:
+                if excess <= 0:
+                    break
+                if now - mtime < self.evict_grace_s:
+                    break  # sorted: everything after is younger still
+                try:
+                    if os.path.getmtime(path) != mtime:
+                        continue  # touched since listing: not LRU anymore
+                    os.unlink(path)
+                    excess -= 1
+                except OSError:
+                    continue
         except OSError:
             pass  # concurrent evictors / permissions: never fatal

@@ -14,12 +14,16 @@ directory, persistently across processes (the paper's
 tune-once-run-many model; dynamic shapes share its §7.5 limitation).
 
 Pipeline: trace -> plan (``make_plan``: patterns bounded by the
-explorer guardrail) -> **stitch** (``stitcher.make_groups``: adjacent
+explorer guardrail) -> **stitch** (``stitcher.search_groups``: adjacent
 row-compatible patterns and sandwiched singletons merge into stitch
-groups, priced by the latency evaluator) -> emit (ONE ``pallas_call``
-per group, inter-pattern values staged in VMEM -- the paper's §4
-megakernel).  Structurally isomorphic groups (repeated transformer
-layers) are emitted once and rebound per instance.
+groups, priced by the latency evaluator; the top-k distinct candidate
+partitions are retained and, with ``autotune=True`` on an accelerator,
+*raced on silicon* by ``autotune.tune_partitions`` -- the committed
+partition is the measured winner, not just the cost-model pick) ->
+emit (ONE ``pallas_call`` per group, inter-pattern values staged in
+VMEM -- the paper's §4 megakernel).  Structurally isomorphic groups
+(repeated transformer layers) are emitted once and rebound per
+instance.
 
 Dispatch: the whole fusion schedule -- stitched group kernels, packed
 subgraphs and leftover singleton ops -- is composed into **one**
@@ -46,8 +50,8 @@ from .codegen import Emitted, emit_group
 from .costctx import CostContext
 from .cost_model import Hardware, KernelEstimate, V5E
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, StitchGroup
-from .plan_cache import FORMAT_VERSION, PlanCache, entry_to_groups, \
-    entry_to_plan, graph_signature, plan_to_entry
+from .plan_cache import FORMAT_VERSION, PlanCache, entry_partition_source, \
+    entry_to_groups, entry_to_plan, graph_signature, plan_to_entry
 from .planner import PlanStats, make_plan, plan_stats
 from .stitcher import search_groups
 from .tracer import bind_node, trace
@@ -78,6 +82,11 @@ class StitchReport:
     beam_states_explored: int = 0    # states priced by the partition search
     group_tuned: int = 0             # groups with a *measured* schedule
     group_tuned_wins: int = 0        # ...where measurement beat the analytic pick
+    # -- measured top-k partition tuning -------------------------------------
+    partition_source: str = "model"  # how the committed partition was chosen
+    partition_candidates: int = 0    # distinct top-k partitions considered
+    partition_index: int = 0         # winner's rank in the model ordering
+    #                                  (> 0: silicon disagreed with the model)
 
 
 class _Compiled:
@@ -392,20 +401,73 @@ class StitchedFunction:
                 overrides = [{} for _ in plan.patterns]
 
         # ---- stitch groups: compose patterns into megakernels -------------
+        # The partition search ranks the top-k distinct candidate
+        # partitions by modeled gain; with an accelerator available the
+        # candidates are *raced on silicon* (``tune_partitions``) and
+        # the measured winner is committed -- the paper's
+        # model-validated-by-measurement tuning of the stitching scheme.
+        # A cached entry whose partition was already measured is
+        # trusted; a pre-v4 (or model-sourced) entry degrades to
+        # re-measuring and is upgraded in place.
         groups: list[StitchGroup]
         group_overrides: list[dict]
         groups_from_cache = False
         stitch_stats = None
+        partition_source = "model"
+        partition_index = 0
+        partition_candidates = 0
         if self._stitch_groups:
+            from .autotune import autotune_available
+
+            can_tune = self._autotune and autotune_available()
             loaded = (entry_to_groups(entry, plan, graph)
                       if entry is not None else None)
-            if loaded is not None:
+            cached_source = (entry_partition_source(entry)
+                             if entry is not None else "model")
+            if loaded is not None and (cached_source == "measured"
+                                       or not can_tune):
+                # trust the cached composition: its partition was raced
+                # already, or this process cannot measure anyway.
                 groups, group_overrides = loaded
                 groups_from_cache = True
+                partition_source = cached_source
             else:
-                groups, stitch_stats = search_groups(graph, plan, self._hw,
-                                                     ctx=ctx)
-                group_overrides = [{} for _ in groups]
+                # pre-v4 / model-sourced entries degrade to re-measuring
+                # the *partition*, but their group schedule pins (PR 3
+                # measurements, keyed by composition) are reused for any
+                # winner group with the same parts instead of being
+                # re-swept from scratch.
+                loaded_over_by_parts: dict[tuple, dict] = {}
+                if loaded is not None:
+                    for lgrp, lover in zip(*loaded):
+                        if lover:
+                            loaded_over_by_parts[lgrp.parts] = lover
+                result = search_groups(graph, plan, self._hw, ctx=ctx)
+                stitch_stats = result.stats
+                candidates = result.candidates
+                partition_candidates = len(candidates)
+                groups = result.groups
+                if can_tune and len(candidates) > 1:
+                    from .autotune import tune_partitions
+
+                    res = tune_partitions(
+                        graph, [c.groups for c in candidates],
+                        hw=self._hw, interpret=self._interpret, ctx=ctx)
+                    if res is not None:
+                        # commit the raced winner; its schedule *pins*
+                        # are left to the per-group measured sweep below
+                        # (the race's family swaps screen partitions,
+                        # they are not a substitute for the tile sweep).
+                        groups = candidates[res.index].groups
+                        partition_source = "measured"
+                        partition_index = res.index
+                        autotuned = True
+                # a lone candidate stays model-sourced: "measured" is
+                # never stamped without an actual race, so a later
+                # process with a wider REPRO_STITCH_TOPK still races.
+                group_overrides = [
+                    dict(loaded_over_by_parts.get(grp.parts, {}))
+                    for grp in groups]
         else:
             groups = [StitchGroup((p.members,)) for p in plan.patterns]
             group_overrides = [{} for _ in groups]
@@ -560,7 +622,10 @@ class StitchedFunction:
                             if self._stitch_groups else None)
             self._plan_cache.store(
                 sig, plan_to_entry(plan, schedules, sig, groups=groups_arg,
-                                   group_schedules=group_scheds))
+                                   group_schedules=group_scheds,
+                                   partition_source=(partition_source
+                                                     if self._stitch_groups
+                                                     else None)))
         plan_time = time.perf_counter() - t0
 
         stats = plan_stats(graph, plan, ctx=ctx, groups=groups)
@@ -586,6 +651,9 @@ class StitchedFunction:
                                   if stitch_stats else 0),
             group_tuned=group_tuned,
             group_tuned_wins=group_tuned_wins,
+            partition_source=partition_source,
+            partition_candidates=partition_candidates,
+            partition_index=partition_index,
         )
 
         # determine output tree

@@ -58,6 +58,13 @@ ENV_BEAM = "REPRO_STITCH_BEAM"
 #: Default beam width when ``$REPRO_STITCH_BEAM`` is unset.
 DEFAULT_BEAM_WIDTH = 4
 
+#: Env knob: how many distinct top-ranked partitions ``search_groups``
+#: retains for measured tuning (1 = the cost-model winner only).
+ENV_TOPK = "REPRO_STITCH_TOPK"
+
+#: Default top-k when ``$REPRO_STITCH_TOPK`` is unset.
+DEFAULT_TOPK = 3
+
 
 def beam_width_from_env() -> int:
     try:
@@ -65,6 +72,14 @@ def beam_width_from_env() -> int:
     except ValueError:
         return DEFAULT_BEAM_WIDTH
     return max(1, width)
+
+
+def topk_from_env() -> int:
+    try:
+        k = int(os.environ.get(ENV_TOPK, DEFAULT_TOPK))
+    except ValueError:
+        return DEFAULT_TOPK
+    return max(1, k)
 
 
 @dataclass
@@ -77,6 +92,40 @@ class StitchStats:
     segments_reused: int = 0     # isomorphic segments replaying a partition
     gain_s: float = 0.0          # total modeled latency gain of the result
     greedy_gain_s: float = 0.0   # what the width-1 (greedy) partition gains
+    topk: int = 1                # how many candidates the search was asked for
+    candidates: int = 1          # distinct candidate partitions retained
+
+
+@dataclass
+class PartitionCandidate:
+    """One candidate partition of the pattern chain, ready for emission."""
+
+    groups: list                 # list[StitchGroup]
+    gain_s: float                # total modeled stitch gain of the partition
+    scratch_bytes: int = 0       # staged VMEM bytes/row across stitched groups
+
+
+@dataclass
+class TopKResult:
+    """Ranked distinct partitions from ``search_groups``.
+
+    ``candidates[0]`` is the cost-model winner (the floor-compared
+    partition previous revisions returned outright); the remainder are
+    the next-best distinct partitions in descending modeled gain -- the
+    measurement candidates ``autotune.tune_partitions`` races on
+    silicon.  Unpacking as ``groups, stats = search_groups(...)`` keeps
+    working: iteration yields the winning groups then the stats.
+    """
+
+    candidates: list[PartitionCandidate]
+    stats: StitchStats
+
+    @property
+    def groups(self) -> list:
+        return self.candidates[0].groups
+
+    def __iter__(self):
+        return iter((self.groups, self.stats))
 
 
 def _absorbable(graph: Graph, nid: int, covered: set[int]) -> bool:
@@ -192,6 +241,33 @@ class _State:
     cur_gain: float          # the open group's share of ``gain``
 
 
+def _state_rank_key(s: _State) -> tuple:
+    """Total deterministic beam order: gain (descending), then the
+    partition shape tuple (parts per group), then each group's first
+    member.  Equal-score offers previously fell back to dict-insertion
+    order, so the beam contents -- and therefore the chosen partition
+    and its ``graph_signature``-keyed cache entry -- could differ
+    between runs that merely discovered patterns in a different order.
+    """
+    shape = tuple(len(g) for g in s.closed) + ((len(s.cur),) if s.cur else ())
+    firsts = tuple(min(p) for g in s.closed for p in g) \
+        + tuple(min(p) for p in s.cur)
+    return (-s.gain, shape, firsts)
+
+
+def _partition_fp(groups) -> tuple:
+    """Hashable identity of a partition (dedup across beam states)."""
+    return tuple(tuple(tuple(sorted(p)) for p in g) for g in groups)
+
+
+def _candidate_rank_key(cand: tuple) -> tuple:
+    """Deterministic candidate order: gain desc, then shape, then ids."""
+    groups, gain = cand
+    shape = tuple(len(g) for g in groups)
+    firsts = tuple(min(p) for g in groups for p in g)
+    return (-gain, shape, firsts)
+
+
 class _PartitionSearch:
     """Beam search over group-boundary partitions of one pattern chain.
 
@@ -252,8 +328,11 @@ class _PartitionSearch:
 
     # -- width-N beam -------------------------------------------------------
     def beam(self, pats: list[frozenset[int]],
-             pattern_set: set[frozenset[int]]
-             ) -> tuple[list[tuple], float]:
+             pattern_set: set[frozenset[int]],
+             keep: int = 1) -> list[tuple[list[tuple], float]]:
+        """Beam-search the segment; return up to ``keep`` distinct
+        repaired partitions ranked by ``_candidate_rank_key`` (gain
+        descending with the deterministic shape tie-break)."""
         states = [_State((), (), frozenset(), 0.0, 0.0)]
         for pat in pats:
             nxt: dict[tuple, _State] = {}
@@ -262,7 +341,9 @@ class _PartitionSearch:
                 self.states_explored += 1
                 key = (s.cur, s.absorbed)
                 old = nxt.get(key)
-                if old is None or s.gain > old.gain:
+                if old is None or s.gain > old.gain or (
+                        s.gain == old.gain
+                        and _state_rank_key(s) < _state_rank_key(old)):
                     nxt[key] = s
 
             for s in states:
@@ -282,11 +363,21 @@ class _PartitionSearch:
                         g = self._group_score(cur)
                         offer(_State(s.closed, cur, absorbed,
                                      s.gain - s.cur_gain + g, g))
-            states = sorted(nxt.values(), key=lambda s: -s.gain)[:self.width]
+            states = sorted(nxt.values(), key=_state_rank_key)[:self.width]
 
-        best = max(states, key=lambda s: s.gain)
-        groups = list(best.closed) + ([best.cur] if best.cur else [])
-        return self._repair(groups, pattern_set)
+        out: list[tuple[list[tuple], float]] = []
+        seen: set[tuple] = set()
+        for s in sorted(states, key=_state_rank_key):
+            groups = list(s.closed) + ([s.cur] if s.cur else [])
+            repaired, gain = self._repair(groups, pattern_set)
+            fp = _partition_fp(repaired)
+            if fp in seen:
+                continue
+            seen.add(fp)
+            out.append((repaired, gain))
+            if len(out) >= keep:
+                break
+        return sorted(out, key=_candidate_rank_key)
 
     def _repair(self, groups: list[tuple],
                 pattern_set: set[frozenset[int]]
@@ -404,13 +495,25 @@ def _absorb_leftovers(graph: Graph, groups: list[list[frozenset[int]]],
                 break
 
 
+def _candidate_scratch_bytes(graph: Graph, ctx: CostContext,
+                             groups: list[tuple]) -> int:
+    """Staged VMEM bytes/row a candidate partition would allocate."""
+    from .memory_planner import plan_partition_scratch
+
+    total = 0
+    for sp in plan_partition_scratch(graph, groups, ctx.info):
+        if sp is not None:
+            total += sp.staged_bytes_per_row
+    return total
+
+
 def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
                   ctx: CostContext | None = None,
                   absorb_leftovers: bool = True,
-                  beam_width: int | None = None
-                  ) -> tuple[list[StitchGroup], StitchStats]:
-    """Partition the plan's patterns into stitch groups; return the groups
-    plus the search statistics.
+                  beam_width: int | None = None,
+                  topk: int | None = None) -> TopKResult:
+    """Partition the plan's patterns into stitch groups; return the top-k
+    distinct candidate partitions plus the search statistics.
 
     Patterns are walked in topological (min-member) order.  The chain is
     split into segments at structurally unmergeable boundaries; each
@@ -422,15 +525,24 @@ def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
     already-searched one (equal per-pattern ``struct_key`` sequences)
     replay its partition.  Unmerged patterns become singleton groups, so
     the result always covers every plan pattern exactly once.
+
+    Beyond the winner, up to ``topk`` (``$REPRO_STITCH_TOPK``, default
+    3) distinct runner-up partitions are retained: each segment's beam
+    keeps its ranked end states, and global runners-up swap one
+    segment's choice for its next-best alternative, ranked by modeled
+    gain with the staged-VMEM footprint as the deterministic tie-break.
+    ``autotune.tune_partitions`` races these candidates on silicon
+    instead of trusting the cost-model ranking.
     """
     if ctx is None:
         ctx = CostContext(graph, hw)
     width = max(1, int(beam_width if beam_width is not None
                        else beam_width_from_env()))
+    k = max(1, int(topk if topk is not None else topk_from_env()))
     pats = sorted((p.members for p in plan.patterns), key=lambda m: min(m))
-    stats = StitchStats(beam_width=width)
+    stats = StitchStats(beam_width=width, topk=k)
     if not pats:
-        return [], stats
+        return TopKResult([PartitionCandidate([], 0.0)], stats)
 
     base_covered: frozenset[int] = frozenset()
     for m in pats:
@@ -442,6 +554,7 @@ def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
     stats.segments = len(segs)
 
     shape_memo: dict[tuple, tuple[int, ...]] = {}
+    seg_choices: list[list[tuple[list[tuple], float]]] = []
     groups: list[list[frozenset[int]]] = []
     for seg in segs:
         seg_key = tuple(ctx.struct_key(p) for p in seg)
@@ -453,18 +566,25 @@ def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
         # honestly reports what width-1 would have gained.
         greedy_groups, greedy_gain = search.greedy(seg)
         stats.greedy_gain_s += greedy_gain
+        cands = [(greedy_groups, greedy_gain)]
         if replayed is not None:
             stats.segments_reused += 1
             replay_gain = sum(search._group_gain(g) for g in replayed)
-            chosen = replayed if replay_gain >= greedy_gain \
-                else greedy_groups
-        elif width == 1:
-            chosen = greedy_groups
-        else:
-            beam_groups, beam_gain = search.beam(seg, pattern_set)
-            chosen = (beam_groups if beam_gain >= greedy_gain
-                      else greedy_groups)
+            cands.append((replayed, replay_gain))
+        elif width > 1:
+            cands.extend(search.beam(seg, pattern_set, keep=k))
+        # dedup + deterministic ranking (gain desc, then shape)
+        ranked: list[tuple[list[tuple], float]] = []
+        seen: set[tuple] = set()
+        for cand in sorted(cands, key=_candidate_rank_key):
+            fp = _partition_fp(cand[0])
+            if fp not in seen:
+                seen.add(fp)
+                ranked.append(cand)
+        chosen = ranked[0][0]
+        if width > 1 and replayed is None:
             shape_memo[seg_key] = _shape_of(chosen, pattern_set)
+        seg_choices.append(ranked[:k])
         search.commit(chosen)
         groups.extend(list(g) for g in chosen)
 
@@ -477,7 +597,40 @@ def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
             covered |= p
     if absorb_leftovers:
         _absorb_leftovers(graph, groups, ctx, covered)
-    return [StitchGroup(tuple(g)) for g in groups], stats
+
+    best = PartitionCandidate(
+        [StitchGroup(tuple(g)) for g in groups],
+        ctx.partition_gain([tuple(g) for g in groups]),
+        _candidate_scratch_bytes(graph, ctx, [tuple(g) for g in groups]))
+    candidates = [best]
+    # global runners-up: swap one segment's choice for its next-ranked
+    # alternative; a swap whose groups would double-cover a node
+    # (alternatives absorbed different leftovers than the committed
+    # partition) is skipped.  Valid swaps are ranked by modeled gain
+    # with the staged-VMEM footprint as the tie-break -- when two
+    # runners-up price identically, the one pressuring VMEM less gets
+    # the silicon slot -- and truncated to the k-1 measurement slots.
+    alts: list[PartitionCandidate] = []
+    for si, ranked in enumerate(seg_choices):
+        for ai in range(1, len(ranked)):
+            alt_groups: list[tuple] = []
+            for sj, other in enumerate(seg_choices):
+                alt_groups.extend(
+                    tuple(g) for g in
+                    (ranked[ai][0] if sj == si else other[0][0]))
+            members = [n for g in alt_groups for p in g for n in p]
+            if len(members) != len(set(members)):
+                continue
+            alts.append(PartitionCandidate(
+                [StitchGroup(g) for g in alt_groups],
+                ctx.partition_gain(alt_groups),
+                _candidate_scratch_bytes(graph, ctx, alt_groups)))
+    alts.sort(key=lambda c: (
+        -c.gain_s, c.scratch_bytes,
+        tuple(tuple(tuple(sorted(p)) for p in g.parts) for g in c.groups)))
+    candidates.extend(alts[:k - 1])
+    stats.candidates = len(candidates)
+    return TopKResult(candidates, stats)
 
 
 def make_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
@@ -486,7 +639,6 @@ def make_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
                 beam_width: int | None = None) -> list[StitchGroup]:
     """Partition the plan's patterns into stitch groups (compat wrapper
     around ``search_groups``, discarding the search statistics)."""
-    groups, _ = search_groups(graph, plan, hw, ctx=ctx,
-                              absorb_leftovers=absorb_leftovers,
-                              beam_width=beam_width)
-    return groups
+    return search_groups(graph, plan, hw, ctx=ctx,
+                         absorb_leftovers=absorb_leftovers,
+                         beam_width=beam_width).groups

@@ -278,7 +278,10 @@ def test_entry_to_groups_validates(tmp_path):
 
 
 def test_plan_cache_lru_eviction(tmp_path):
-    cache = PlanCache(str(tmp_path), max_entries=2)
+    # grace disabled: this test stores entries milliseconds apart and
+    # asserts LRU behavior; the store-during-evict grace window has its
+    # own two-instance test in test_topk_tune.py.
+    cache = PlanCache(str(tmp_path), max_entries=2, evict_grace_s=0.0)
     entries = {}
     for name in ("aaa", "bbb", "ccc"):
         entries[name] = {"format": 2, "signature": name, "patterns": []}

@@ -1,0 +1,201 @@
+"""ISSUE-4 satellite: phase-aware donation for streaming kernels.
+
+The onepass-only aliasing policy both *missed legal donations* (a FULL
+input whose block index map follows the output's is safe to overwrite
+in the streaming grid) and -- had it been naively extended -- *would
+have corrupted re-read inputs* (a ROW input's block is pinned at
+``(i, 0)`` and re-read by every column tile of the final phase, after
+the first aliased write has already landed on it).  These tests pin
+both sides of the legality line.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CostContext, trace
+from repro.core.codegen import _alias_map, _alias_map_streaming, emit_pattern
+from repro.core.ir import OpKind
+
+rng = np.random.default_rng(53)
+
+
+def _full_fn(x, g):
+    return jnp.tanh(x) * g + x * 0.5
+
+
+def _row_fn(x, s):
+    t = x * s
+    r = jnp.sum(t, -1, keepdims=True)
+    return r * s
+
+
+def _pattern_io(graph, ctx, pattern):
+    b = ctx.bounds(pattern)
+    ext_ids = [i for i in b.inputs
+               if graph.node(i).kind is not OpKind.CONST]
+    return ext_ids, list(b.outputs)
+
+
+def test_streaming_full_alias_taken_and_correct():
+    """A FULL input consumed only inside the kernel now donates into the
+    streaming kernel's output buffer (previously: streaming kernels
+    never took ``input_output_aliases`` at all) -- and the multi-tile
+    grid still produces correct results."""
+    x = rng.standard_normal((8, 256)).astype(np.float32)
+    g = (np.abs(rng.standard_normal(256)) + 0.5).astype(np.float32)
+    graph = trace(_full_fn, x, g)
+    ctx = CostContext(graph)
+    pattern = frozenset(graph.fusible_nodes())
+    x_id = graph.inputs[0]
+    em = emit_pattern(graph, pattern, ctx=ctx,
+                      schedule_override={"schedule": "streaming",
+                                         "block_rows": 4,
+                                         "block_cols": 128},
+                      donate_into=frozenset({x_id}))
+    assert em.estimate.schedule == "streaming"
+    assert em.io_aliases                  # the legal donation is taken
+    aliased_ext = [em.ext_ids[i] for i in em.io_aliases]
+    assert aliased_ext == [x_id]
+    (y,) = em.fn(jnp.asarray(x), jnp.asarray(g))
+    ref = _full_fn(jnp.asarray(x), jnp.asarray(g))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # without donate_into, no aliasing (the pre-existing default)
+    em0 = emit_pattern(graph, pattern, ctx=ctx,
+                       schedule_override={"schedule": "streaming",
+                                          "block_rows": 4,
+                                          "block_cols": 128})
+    assert not em0.io_aliases
+
+
+def test_streaming_row_alias_refused_where_naive_would_corrupt():
+    """The naive (onepass) alias map WOULD donate the ROW input into the
+    ROW output; the phase-aware check must refuse it whenever the row
+    spans more than one column tile (the block is re-read at tiles
+    ``j >= 1`` of the final phase, after the write at ``j == 0``)."""
+    x = rng.standard_normal((8, 256)).astype(np.float32)
+    s = rng.standard_normal((8, 1)).astype(np.float32)
+    graph = trace(_row_fn, x, s)
+    ctx = CostContext(graph)
+    pattern = frozenset(graph.fusible_nodes())
+    info = ctx.info(pattern)
+    assert info is not None
+    s_id = graph.inputs[1]
+    ext_ids, out_ids = _pattern_io(graph, ctx, pattern)
+    donate = frozenset({s_id})
+
+    naive = _alias_map(graph, info, ext_ids, out_ids, donate)
+    assert naive                          # onepass logic says "alias it"
+    # ...but with 2 column tiles the final phase re-reads the block
+    # after writing it: the phase-aware check refuses
+    assert _alias_map_streaming(graph, info, ext_ids, out_ids, donate,
+                                block_cols=128, phases=2) is None
+    # a single column tile defers the write-back past every read: legal
+    assert _alias_map_streaming(graph, info, ext_ids, out_ids, donate,
+                                block_cols=256, phases=2)
+
+    # the emitted multi-tile streaming kernel carries no alias and stays
+    # correct even when asked to donate the ROW input
+    em = emit_pattern(graph, pattern, ctx=ctx,
+                      schedule_override={"schedule": "streaming",
+                                         "block_rows": 4,
+                                         "block_cols": 128},
+                      donate_into=donate)
+    assert em.estimate.schedule == "streaming"
+    assert not em.io_aliases
+    (y,) = em.fn(jnp.asarray(x), jnp.asarray(s))
+    ref = _row_fn(jnp.asarray(x), jnp.asarray(s))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _softmax_like(x, g):
+    e = jnp.exp(x - jnp.max(x, axis=-1, keepdims=True))
+    return e / jnp.sum(e, axis=-1, keepdims=True) * g
+
+
+def test_streaming_multiphase_full_alias_refused_across_tiles():
+    """phases >= 2 with several column tiles: Pallas flushes the output
+    window whenever its block index changes -- including after phase-0
+    cells the kernel never stored to -- so an aliased FULL input's
+    tiles would be clobbered before phase 1 re-reads them.  Refused;
+    a single column tile (write-back deferred until the next row
+    block) stays legal."""
+    x = rng.standard_normal((8, 256)).astype(np.float32)
+    g = (np.abs(rng.standard_normal(256)) + 0.5).astype(np.float32)
+    graph = trace(_softmax_like, x, g)
+    ctx = CostContext(graph)
+    pattern = frozenset(graph.fusible_nodes())
+    info = ctx.info(pattern)
+    assert info is not None
+    x_id = graph.inputs[0]
+    ext_ids, out_ids = _pattern_io(graph, ctx, pattern)
+    donate = frozenset({x_id})
+    assert _alias_map_streaming(graph, info, ext_ids, out_ids, donate,
+                                block_cols=128, phases=3) is None
+    assert _alias_map_streaming(graph, info, ext_ids, out_ids, donate,
+                                block_cols=256, phases=3)
+    # the emitter derives phases itself and must refuse the multi-tile
+    # donation while staying correct
+    em = emit_pattern(graph, pattern, ctx=ctx,
+                      schedule_override={"schedule": "streaming",
+                                         "block_rows": 4,
+                                         "block_cols": 128},
+                      donate_into=donate)
+    assert em.estimate.schedule == "streaming"
+    assert not em.io_aliases
+    (y,) = em.fn(jnp.asarray(x), jnp.asarray(g))
+    ref = _softmax_like(jnp.asarray(x), jnp.asarray(g))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    em1 = emit_pattern(graph, pattern, ctx=ctx,
+                       schedule_override={"schedule": "streaming",
+                                          "block_rows": 4,
+                                          "block_cols": 256},
+                       donate_into=donate)
+    if em1.estimate.schedule == "streaming":
+        assert em1.io_aliases            # single tile: donation taken
+        (y1,) = em1.fn(jnp.asarray(x), jnp.asarray(g))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_streaming_single_tile_row_alias_correct():
+    """NC == 1: the ROW donation is legal; the kernel must still match
+    the reference with the alias installed."""
+    x = rng.standard_normal((8, 256)).astype(np.float32)
+    s = rng.standard_normal((8, 1)).astype(np.float32)
+    graph = trace(_row_fn, x, s)
+    ctx = CostContext(graph)
+    pattern = frozenset(graph.fusible_nodes())
+    s_id = graph.inputs[1]
+    em = emit_pattern(graph, pattern, ctx=ctx,
+                      schedule_override={"schedule": "streaming",
+                                         "block_rows": 4,
+                                         "block_cols": 256},
+                      donate_into=frozenset({s_id}))
+    assert em.estimate.schedule == "streaming"
+    assert em.io_aliases
+    (y,) = em.fn(jnp.asarray(x), jnp.asarray(s))
+    ref = _row_fn(jnp.asarray(x), jnp.asarray(s))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_onepass_alias_behavior_unchanged():
+    """The onepass path keeps its existing (legal) aliasing."""
+    x = rng.standard_normal((8, 128)).astype(np.float32)
+    g = np.ones(128, np.float32)
+    graph = trace(_full_fn, x, g)
+    ctx = CostContext(graph)
+    pattern = frozenset(graph.fusible_nodes())
+    x_id = graph.inputs[0]
+    em = emit_pattern(graph, pattern, ctx=ctx,
+                      donate_into=frozenset({x_id}))
+    if em.estimate.schedule == "onepass":
+        assert em.io_aliases
+        (y,) = em.fn(jnp.asarray(x), jnp.asarray(g))
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(_full_fn(jnp.asarray(x),
+                                               jnp.asarray(g))),
+            rtol=1e-5, atol=1e-5)
