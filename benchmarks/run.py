@@ -58,15 +58,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["fig1", "table2", "fig7", "overhead", "roofline",
                              "plan_time", "stitch_groups", "beam_stitch",
-                             "topk_tune"])
+                             "topk_tune", "recompute"])
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write structured per-row records")
     args = ap.parse_args()
 
     from . import (bench_beam_stitch, bench_fig1_layernorm,
                    bench_fig7_speedup, bench_overhead, bench_plan_time,
-                   bench_stitch_groups, bench_table2_breakdown,
-                   bench_topk_tune, roofline)
+                   bench_recompute, bench_stitch_groups,
+                   bench_table2_breakdown, bench_topk_tune, roofline)
 
     suites = {
         "fig1": bench_fig1_layernorm.run,
@@ -78,6 +78,7 @@ def main() -> None:
         "stitch_groups": bench_stitch_groups.run,
         "beam_stitch": bench_beam_stitch.run,
         "topk_tune": bench_topk_tune.run,
+        "recompute": bench_recompute.run,
     }
     selected = [args.only] if args.only else list(suites)
 

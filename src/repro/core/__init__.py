@@ -1,7 +1,9 @@
 """FusionStitching core: the paper's contribution as a composable JAX module."""
 from .costctx import CostContext, NullContext
 from .cost_model import Hardware, V5E, best_estimate, delta_evaluator, \
-    partition_gain, stitch_gain
+    partition_gain, recompute_cost, recompute_enabled, reuse_plan, \
+    stitch_gain
+from .memory_planner import ReusePlan, plan_reuse
 from .ir import FusionPlan, Graph, Node, OpKind, Pattern, StitchGroup
 from .plan_cache import PlanCache, graph_signature
 from .planner import make_plan, plan_stats
@@ -13,7 +15,9 @@ from .tracer import trace
 __all__ = [
     "CostContext", "NullContext",
     "Hardware", "V5E", "best_estimate", "delta_evaluator",
-    "partition_gain", "stitch_gain",
+    "partition_gain", "recompute_cost", "recompute_enabled", "reuse_plan",
+    "stitch_gain",
+    "ReusePlan", "plan_reuse",
     "FusionPlan", "Graph", "Node", "OpKind", "Pattern", "StitchGroup",
     "PlanCache", "graph_signature",
     "make_plan", "plan_stats",

@@ -126,6 +126,8 @@ class Emitted:
     hbm_saved: int = 0           # inter-pattern HBM bytes the group avoids
     staged_slots: int = 0        # explicit VMEM scratch buffers allocated
     io_aliases: dict = None      # ext pos -> out pos donated into the kernel
+    n_recomputed: int = 0        # values inlined per consumer (not staged)
+    recompute_bytes_freed: int = 0  # VMEM scratch bytes those flips elide
 
 
 def _override_estimate(graph: Graph, pattern: frozenset[int], info,
@@ -141,9 +143,22 @@ def _override_estimate(graph: Graph, pattern: frozenset[int], info,
     if info is None:
         return None
     if sched == "onepass":
+        rec = frozenset(int(x) for x in override.get("recompute", ())
+                        if isinstance(x, int)
+                        and not isinstance(x, bool)) & pattern
+        if rec:
+            # a corrupt / hand-edited pin naming an output (or a value
+            # nothing inside reads) must degrade, not miscompile: the
+            # emitter never materializes recomputed values, so an
+            # unmaterialized output would crash the kernel's HBM write.
+            outs = set(graph.pattern_outputs(pattern))
+            rec = frozenset(
+                r for r in rec
+                if r not in outs
+                and any(c in pattern for c in graph.consumers(r)))
         est = estimate_onepass(graph, pattern, info,
                                int(override.get("block_rows", 8)), hw,
-                               ctx=ctx)
+                               ctx=ctx, recompute=rec or None)
         return est if est.feasible else None
     if sched == "streaming":
         est = estimate_streaming(graph, pattern, info,
@@ -273,16 +288,29 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
     ext_ids = [i for i in ext_all if graph.node(i).kind is not OpKind.CONST]
 
     if not force_packed and pattern_emittable(graph, pattern, info=info):
-        scratch = plan_scratch(graph, pattern, info)
+        rec = frozenset(est.recompute_ids) if est.schedule == "onepass" \
+            else frozenset()
+        scratch = (ctx.scratch(pattern, info, recompute=rec)
+                   if ctx is not None
+                   else plan_scratch(graph, pattern, info, recompute=rec))
+        rec_freed = 0
+        if rec:
+            # the all-staged baseline was already priced (and memoized)
+            # during the schedule sweep
+            base = (ctx.scratch(pattern, info) if ctx is not None
+                    else plan_scratch(graph, pattern, info))
+            rec_freed = (base.total_bytes - scratch.total_bytes) \
+                * max(1, min(est.block_rows or 1, info.R))
         if est.schedule == "onepass":
             aliases = _alias_map(graph, info, ext_ids, out_ids, donate_into)
             fn = _emit_pallas(graph, pattern, info, est.block_rows, ext_ids,
                               out_ids, interpret=interpret,
-                              io_aliases=aliases)
+                              io_aliases=aliases, recompute=rec)
             return Emitted(fn, "pallas", est, ext_ids, out_ids,
                            scratch.total_bytes, scratch.naive_bytes,
                            parts=(tuple(sorted(pattern)),),
-                           io_aliases=aliases)
+                           io_aliases=aliases, n_recomputed=len(rec),
+                           recompute_bytes_freed=rec_freed)
         if est.schedule == "streaming":
             # the estimate carries the column tile (analytic sweep, tuned
             # override or plan-cache entry alike -- no side-channel)
@@ -360,21 +388,31 @@ def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
             est.schedule in ("onepass", "streaming"):
         from .memory_planner import group_order, plan_group_scratch
 
-        scratch = plan_group_scratch(graph, parts_fs, info)
+        rec = frozenset(est.recompute_ids) if est.schedule == "onepass" \
+            else frozenset()
+        scratch = plan_group_scratch(graph, parts_fs, info, recompute=rec)
         order = group_order(graph, parts_fs)
         aliases = None
         n_staged = 0
+        rec_freed = 0
         if est.schedule == "onepass":
             from .memory_planner import plan_staged_buffers
 
             aliases = _alias_map(graph, info, ext_ids, out_ids, donate_into)
             br = max(1, min(est.block_rows or 1, info.R))  # emitter clamp
+            if rec:
+                # both sides of the subtraction must use the group's
+                # back-to-back emission order (the ctx memo plans in
+                # sorted order, which would skew the delta)
+                base = plan_group_scratch(graph, parts_fs, info)
+                rec_freed = (base.total_bytes - scratch.total_bytes) * br
             staged = plan_staged_buffers(graph, info.roles, scratch, br,
                                          info.C)
             n_staged = len(staged[1])
             fn = _emit_pallas(graph, union, info, est.block_rows, ext_ids,
                               out_ids, interpret=interpret, order=order,
-                              staged=staged, io_aliases=aliases)
+                              staged=staged, io_aliases=aliases,
+                              recompute=rec)
         else:
             from .cost_model import reduce_levels
             phases = max(reduce_levels(graph, union).values(),
@@ -390,7 +428,9 @@ def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
         return Emitted(fn, "pallas", est, ext_ids, out_ids,
                        scratch.total_bytes, scratch.naive_bytes,
                        parts=parts, hbm_saved=hbm_saved,
-                       staged_slots=n_staged, io_aliases=aliases)
+                       staged_slots=n_staged, io_aliases=aliases,
+                       n_recomputed=len(rec),
+                       recompute_bytes_freed=rec_freed)
 
     # defensive fallback (stale cached group / emitter gap): the union
     # still runs as one launch via kernel packing.
@@ -626,17 +666,21 @@ def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
                  block_rows: int, ext_ids: list[int], out_ids: list[int],
                  *, interpret: bool, order: list[int] | None = None,
                  staged: tuple | None = None,
-                 io_aliases: dict[int, int] | None = None) -> Callable:
+                 io_aliases: dict[int, int] | None = None,
+                 recompute: frozenset[int] = frozenset()) -> Callable:
     R, C = info.R, info.C
     br = max(1, min(block_rows, R))
     Rp = math.ceil(R / br) * br
     members = order if order is not None else sorted(pattern)
     roles = info.roles
 
-    # decide stage-vs-recompute for expensive multi-consumer sub-roots:
-    # block composition stages (default); the paper's thread-composition
-    # alternative (recompute) wins only when VMEM is tight, which the
-    # latency sweep already folds into block_rows choice.  We stage.
+    # stage-vs-recompute: block composition stages by default; members in
+    # ``recompute`` realize the paper's thread-composition alternative --
+    # they are never materialized (no env entry, no scratch slot), each
+    # consumer inlines the producer expression instead.  The decision is
+    # made upstream (``memory_planner.plan_reuse`` via the latency
+    # sweep); it wins exactly when VMEM is tight and recompute FLOPs are
+    # free.
 
     ext_roles = [roles[i] for i in ext_ids]
     out_roles = [roles[o] for o in out_ids]
@@ -659,41 +703,51 @@ def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
         for nid, role, ref in zip(ext_ids, ext_roles, in_refs):
             env[nid] = _to_block(ref[...], role, br, C)
 
-        for nid in members:
+        def val(i):
+            if i in env:
+                return env[i]
+            if i in recompute:
+                # thread composition: re-evaluate the producer inline
+                # (a fresh copy of the expression per use -- no staged
+                # value, no scratch slot).
+                return compute(i)
+            cnode = graph.node(i)  # embedded external const
+            v = jnp.asarray(cnode.value)
+            return (_to_block(v, roles[i], br, C)
+                    if cnode.spec.size > 1 else v)
+
+        def compute(nid):
             node = graph.node(nid)
             role = roles[nid]
-            if node.kind is OpKind.CONST:
-                env[nid] = _to_block(
-                    jnp.asarray(node.value), role, br, C
-                ) if node.spec.size > 1 else jnp.asarray(node.value)
-                continue
-
-            def val(i):
-                if i in env:
-                    return env[i]
-                cnode = graph.node(i)  # embedded external const
-                v = jnp.asarray(cnode.value)
-                return (_to_block(v, roles[i], br, C)
-                        if cnode.spec.size > 1 else v)
-
             prim = node.prim
             if prim in _REDUCES:
-                env[nid] = _REDUCES[prim](val(node.inputs[0]))
-            elif prim == "broadcast_in_dim":
-                env[nid] = _to_block(jnp.broadcast_to(
+                return _REDUCES[prim](val(node.inputs[0]))
+            if prim == "broadcast_in_dim":
+                return _to_block(jnp.broadcast_to(
                     val(node.inputs[0]),
                     (br, C) if role is Role.FULL else
                     (br, 1) if role is Role.ROW else
                     (1, C) if role is Role.COL else ()), role, br, C)
-            elif prim in ("reshape", "squeeze", "expand_dims", "copy",
-                          "stop_gradient"):
-                env[nid] = val(node.inputs[0])
-            elif prim == "convert_element_type":
-                env[nid] = val(node.inputs[0]).astype(node.spec.dtype)
-            elif prim == "integer_pow":
-                env[nid] = val(node.inputs[0]) ** node.params.get("y", 2)
-            else:
-                env[nid] = _OPS[prim](*(val(i) for i in node.inputs))
+            if prim in ("reshape", "squeeze", "expand_dims", "copy",
+                        "stop_gradient"):
+                return val(node.inputs[0])
+            if prim == "convert_element_type":
+                return val(node.inputs[0]).astype(node.spec.dtype)
+            if prim == "integer_pow":
+                return val(node.inputs[0]) ** node.params.get("y", 2)
+            return _OPS[prim](*(val(i) for i in node.inputs))
+
+        for nid in members:
+            node = graph.node(nid)
+            if node.kind is OpKind.CONST:
+                env[nid] = _to_block(
+                    jnp.asarray(node.value), roles[nid], br, C
+                ) if node.spec.size > 1 else jnp.asarray(node.value)
+                continue
+            if nid in recompute:
+                continue  # rematerialized inside each consumer via val()
+
+            env[nid] = compute(nid)
             slot = staged_slot.get(nid)
             if slot is not None:  # stage into the assigned VMEM buffer
                 sref = scratch_refs[slot]

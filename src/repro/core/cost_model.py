@@ -24,12 +24,27 @@ TPU re-derivation of the paper's GPU model:
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 
 from .classify import vpu_cost
 from .ir import Graph, OpKind
-from .memory_planner import plan_scratch
+from .memory_planner import ReusePlan, plan_reuse, plan_scratch, \
+    recompute_extra_ops
 from .rowspec import Role, RowInfo, analyze, role_bytes_per_row
+
+#: Env switch: set ``REPRO_RECOMPUTE=0`` to disable the thread-composition
+#: recompute scheme (staging-only pricing and emission, the pre-ISSUE-5
+#: behavior).  Deliberately NOT hashed into ``graph_signature`` (like
+#: ``REPRO_STITCH_TOPK``): cached schedule pins re-validate at load time
+#: and ``plan_cache._sanitize_override`` drops recompute pins when the
+#: knob is off, so old entries degrade instead of being orphaned.
+ENV_RECOMPUTE = "REPRO_RECOMPUTE"
+
+
+def recompute_enabled() -> bool:
+    return os.environ.get(ENV_RECOMPUTE, "1").lower() \
+        not in ("0", "off", "false")
 
 
 @dataclass(frozen=True)
@@ -74,24 +89,33 @@ class KernelEstimate:
     n_steps: int
     feasible: bool
     block_cols: int = 0     # streaming column tile (0: whole row / n.a.)
+    recompute_ids: tuple = ()  # values rematerialized per consumer instead
+    #                            of staged (onepass thread-composition)
 
 
-def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
-                     block_rows: int, hw: Hardware = V5E,
-                     ctx=None) -> KernelEstimate:
-    """Latency of the stitched one-pass row kernel at a given block size."""
-    R, C = info.R, info.C
-    Cp = _pad(C, 128)
-    br = min(block_rows, R)
-    n_steps = math.ceil(R / br)
+def _per_step_elems(role: Role, br: int, Cp: int) -> int:
+    return (br * Cp if role is Role.FULL else
+            br if role is Role.ROW else Cp if role is Role.COL else 1)
 
-    if ctx is not None:
-        b = ctx.bounds(pattern)
-        ext_in, outs = b.inputs, b.outputs
-    else:
-        ext_in = graph.pattern_inputs(pattern)
-        outs = graph.pattern_outputs(pattern)
 
+def _onepass_op_cost(graph: Graph, info: RowInfo, br: int, Cp: int):
+    """One evaluation of a node, in VPU element-ops per grid step."""
+    def op_cost(nid: int) -> float:
+        node = graph.node(nid)
+        role = info.roles[nid]
+        per_step = _per_step_elems(role, br, Cp)
+        if node.kind is OpKind.REDUCE:
+            per_step = br * Cp  # reduce reads a FULL operand tile
+        return vpu_cost(node.prim) * per_step
+    return op_cost
+
+
+def _onepass_fixed_bytes(graph: Graph, info: RowInfo, br: int, Cp: int,
+                         ext_in, outs) -> tuple[int, int]:
+    """(step_hbm, col_bytes): the non-scratch part of the one-pass
+    per-step working set.  Shared by ``estimate_onepass`` and
+    ``reuse_plan`` so the feasibility verdicts of the recompute decision
+    pass and the estimator can never drift apart."""
     def tile_bytes(nid: int) -> int:
         node = graph.node(nid)
         role = info.roles.get(nid)
@@ -107,23 +131,46 @@ def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
                    if graph.node(i).kind is not OpKind.CONST
                    or graph.node(i).spec.size > 128)
     bytes_out = sum(tile_bytes(o) for o in outs)
-    step_hbm = bytes_in + bytes_out
-
-    ops = 0.0
-    for nid in pattern:
-        node = graph.node(nid)
-        role = info.roles[nid]
-        per_step = (br * Cp if role is Role.FULL else
-                    br if role is Role.ROW else Cp if role is Role.COL else 1)
-        if node.kind is OpKind.REDUCE:
-            per_step = br * Cp  # reduce reads a FULL operand tile
-        ops += vpu_cost(node.prim) * per_step
-
-    scratch = (ctx.scratch(pattern, info) if ctx is not None
-               else plan_scratch(graph, pattern, info))
-    scratch_bytes = scratch.total_bytes * br
     col_bytes = sum(Cp * graph.node(i).spec.itemsize for i in ext_in
                     if info.roles.get(i) is Role.COL)
+    return bytes_in + bytes_out, col_bytes
+
+
+def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
+                     block_rows: int, hw: Hardware = V5E,
+                     ctx=None,
+                     recompute: frozenset[int] | None = None
+                     ) -> KernelEstimate:
+    """Latency of the stitched one-pass row kernel at a given block size.
+
+    ``recompute`` prices the thread-composition variant: those members
+    get no scratch slot (the working set shrinks) but are re-evaluated
+    at every consumer (extra VPU ops, ``recompute_extra_ops``).
+    """
+    R, C = info.R, info.C
+    Cp = _pad(C, 128)
+    br = min(block_rows, R)
+    n_steps = math.ceil(R / br)
+    rec = frozenset(recompute) & pattern if recompute else frozenset()
+
+    if ctx is not None:
+        b = ctx.bounds(pattern)
+        ext_in, outs = b.inputs, b.outputs
+    else:
+        ext_in = graph.pattern_inputs(pattern)
+        outs = graph.pattern_outputs(pattern)
+
+    step_hbm, col_bytes = _onepass_fixed_bytes(graph, info, br, Cp,
+                                               ext_in, outs)
+
+    op_cost = _onepass_op_cost(graph, info, br, Cp)
+    ops = sum(op_cost(nid) for nid in pattern)
+    if rec:
+        ops += recompute_extra_ops(graph, pattern, rec, op_cost)
+
+    scratch = (ctx.scratch(pattern, info, recompute=rec) if ctx is not None
+               else plan_scratch(graph, pattern, info, recompute=rec))
+    scratch_bytes = scratch.total_bytes * br
     working = step_hbm + scratch_bytes + col_bytes
 
     t_hbm = step_hbm / hw.hbm_bw
@@ -137,7 +184,125 @@ def estimate_onepass(graph: Graph, pattern: frozenset[int], info: RowInfo,
                  else graph.pattern_hbm_bytes(pattern))
     lat = n_steps * t_step + hw.launch_s + hw.hbm_latency_s
     return KernelEstimate("onepass", br, lat, total_hbm, ops * n_steps,
-                          int(working), n_steps, double_buffer_fits)
+                          int(working), n_steps, double_buffer_fits,
+                          recompute_ids=tuple(sorted(rec)))
+
+
+# ---------------------------------------------------------------------------
+# stage vs. recompute pricing (paper §4: thread-composition scheme)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RecomputeCost:
+    """Price of rematerializing one value inside its consumers.
+
+    ``cone`` is the member-ancestor closure the inlined expression
+    re-evaluates (reading kernel externals / staged reduce results at
+    the leaves); ``ops_per_row`` its VPU element-ops per row per
+    evaluation; ``ext_read_bytes_per_row`` the external bytes the cone
+    re-reads per row (VMEM-resident re-reads in a one-pass cell, but
+    reported so the trade is visible).  ``legal`` is False when the
+    cone crosses a reduce-level boundary: the value is (or depends on)
+    a reduction, whose result only exists after a full row pass --
+    those values must stay staged (block composition).
+    """
+
+    cone: tuple[int, ...]
+    ops_per_row: float
+    ext_read_bytes_per_row: int
+    legal: bool
+
+
+def recompute_cost(graph: Graph, pattern: frozenset[int], nid: int,
+                   info: RowInfo, outputs=None) -> RecomputeCost:
+    """Memoizable (via ``CostContext.recompute_cost``) stage-vs-recompute
+    pricing of one pattern member (paper §4's per-value scheme choice)."""
+    node = graph.node(nid)
+    outs = set(graph.pattern_outputs(pattern) if outputs is None
+               else outputs)
+    _, anc = graph.reachability()
+    pmask = 0
+    reduce_mask = 0
+    for m in pattern:
+        pmask |= 1 << m
+        if graph.node(m).kind is OpKind.REDUCE:
+            reduce_mask |= 1 << m
+    cone_mask = (anc[nid] & pmask) | (1 << nid)
+    # illegal across reduce-level boundaries: the value is a reduction or
+    # its producer cone contains one (recomputing it per consumer would
+    # redo a full row pass; block composition stages it instead).  An
+    # output must also stay materialized for its HBM write.
+    legal = (node.kind is not OpKind.REDUCE
+             and not (cone_mask & reduce_mask)
+             and nid not in outs
+             and any(c in pattern for c in graph.consumers(nid)))
+
+    cone: list[int] = []
+    m = cone_mask
+    while m:
+        lsb = m & -m
+        cone.append(lsb.bit_length() - 1)
+        m ^= lsb
+    ops = 0.0
+    ext_bytes = 0
+    seen_ext: set[int] = set()
+    for cn in cone:
+        cnode = graph.node(cn)
+        role = info.roles.get(cn)
+        per_row = (info.C if role in (Role.FULL, Role.COL)
+                   else 1 if role in (Role.ROW, Role.SCALAR) else info.C)
+        ops += vpu_cost(cnode.prim) * per_row
+        for i in cnode.inputs:
+            if i not in pattern and i not in seen_ext:
+                seen_ext.add(i)
+                erole = info.roles.get(i)
+                ext_bytes += role_bytes_per_row(
+                    erole if erole is not None else Role.FULL,
+                    info.C, graph.node(i).spec.itemsize)
+    return RecomputeCost(cone=tuple(cone), ops_per_row=ops,
+                         ext_read_bytes_per_row=ext_bytes, legal=legal)
+
+
+def reuse_plan(graph: Graph, pattern: frozenset[int], info: RowInfo,
+               block_rows: int, hw: Hardware = V5E,
+               ctx=None) -> ReusePlan | None:
+    """The pattern's stage-vs-recompute decision at one block size.
+
+    Assembles the fixed (non-scratch) part of the one-pass working set
+    exactly as ``estimate_onepass`` does, screens flip candidates
+    through ``recompute_cost`` legality, and hands the greedy
+    flip-until-feasible loop to ``memory_planner.plan_reuse``.  Returns
+    None when recompute is disabled or no candidate is legal.
+    """
+    if not recompute_enabled():
+        return None
+    R, C = info.R, info.C
+    Cp = _pad(C, 128)
+    br = min(max(1, block_rows), R)
+    if ctx is not None:
+        b = ctx.bounds(pattern)
+        ext_in, outs = b.inputs, b.outputs
+    else:
+        ext_in = graph.pattern_inputs(pattern)
+        outs = graph.pattern_outputs(pattern)
+
+    # legal flip targets with their cone prices (the greedy's per-round
+    # evaluation-order tie-break: cheaper cones first)
+    candidates: dict[int, float] = {}
+    for nid in sorted(pattern):
+        rc = (ctx.recompute_cost(pattern, nid) if ctx is not None
+              else recompute_cost(graph, pattern, nid, info,
+                                  outputs=outs))
+        if rc.legal:
+            candidates[nid] = rc.ops_per_row
+    if not candidates:
+        return None
+
+    step_hbm, col_bytes = _onepass_fixed_bytes(graph, info, br, Cp,
+                                               ext_in, outs)
+    return plan_reuse(graph, pattern, info, hw.vmem_bytes,
+                      block_rows=br, fixed_step_bytes=step_hbm + col_bytes,
+                      op_cost=_onepass_op_cost(graph, info, br, Cp),
+                      candidates=candidates)
 
 
 def reduce_levels(graph: Graph, pattern: frozenset[int]) -> dict[int, int]:
@@ -247,14 +412,31 @@ STREAM_TILES = ((8, 512), (8, 2048), (64, 2048))
 
 def best_estimate(graph: Graph, pattern: frozenset[int],
                   hw: Hardware = V5E, ctx=None) -> KernelEstimate:
-    """Enumerate schedules x launch dims, return the latency-optimal one."""
+    """Enumerate schedules x launch dims, return the latency-optimal one.
+
+    When staging makes a one-pass block size VMEM-infeasible, the
+    thread-composition variant is priced too: ``reuse_plan`` flips the
+    cheapest staged values to per-consumer recompute until the working
+    set fits, and the resulting (smaller-scratch, more-VPU) estimate
+    joins the sweep -- so unions that are *only* feasible under
+    recompute stop losing to a split-or-refuse.
+    """
     cands = [estimate_packed(graph, pattern, hw, ctx=ctx)]
     info = ctx.info(pattern) if ctx is not None else analyze(graph, pattern)
     if info is not None:
+        allow_recompute = recompute_enabled()
         for br in BLOCK_ROWS:
             est = estimate_onepass(graph, pattern, info, br, hw, ctx=ctx)
             if est.feasible:
                 cands.append(est)
+            elif allow_recompute:
+                rp = (ctx.reuse(pattern, br) if ctx is not None
+                      else reuse_plan(graph, pattern, info, br, hw))
+                if rp is not None and rp.feasible and rp.recompute:
+                    est = estimate_onepass(graph, pattern, info, br, hw,
+                                           ctx=ctx, recompute=rp.recompute)
+                    if est.feasible:
+                        cands.append(est)
             if br >= info.R:
                 break
         # streaming (warp-composition analogue) for long rows

@@ -80,6 +80,17 @@ class CostContext:
         self._convex: dict[frozenset[int], bool] = {}
         self._stitch_gain: dict[tuple, object] = {}  # parts tuple -> StitchGain
         self._partition_gain: dict[tuple, float] = {}  # partition fp -> gain
+        self._recompute_cost: dict[tuple, object] = {}  # (pattern, nid)
+        self._reuse: dict[tuple, object] = {}  # (pattern, br) -> ReusePlan|None
+        #: search/planner cap hits ("no silent caps"): name -> count of
+        #: explorations a guardrail truncated.  Surfaces in
+        #: ``PlanStats.caps_hit`` via ``planner.plan_stats``.
+        self.caps: dict[str, int] = {}
+
+    def note_cap(self, name: str, n: int = 1) -> None:
+        """Record that a cap/guardrail truncated exploration ``n`` times."""
+        if n > 0:
+            self.caps[name] = self.caps.get(name, 0) + n
 
     # -- structural queries --------------------------------------------------
     def is_convex(self, pattern: frozenset[int]) -> bool:
@@ -98,14 +109,45 @@ class CostContext:
             self._info[pattern] = got
         return got
 
-    def scratch(self, pattern: frozenset[int], info: RowInfo):
-        """Memoized VMEM scratch plan (independent of the block-row sweep)."""
-        got = self._scratch.get(pattern)
+    def scratch(self, pattern: frozenset[int], info: RowInfo,
+                recompute: frozenset[int] = frozenset()):
+        """Memoized VMEM scratch plan (independent of the block-row sweep;
+        keyed by the stage-vs-recompute flip set)."""
+        key = (pattern, recompute)
+        got = self._scratch.get(key)
         if got is None:
             from .memory_planner import plan_scratch
 
-            got = plan_scratch(self.graph, pattern, info)
-            self._scratch[pattern] = got
+            got = plan_scratch(self.graph, pattern, info,
+                               recompute=recompute)
+            self._scratch[key] = got
+        return got
+
+    def recompute_cost(self, pattern: frozenset[int], nid: int):
+        """Memoized ``cost_model.recompute_cost`` (cone + legality)."""
+        key = (pattern, nid)
+        got = self._recompute_cost.get(key)
+        if got is None:
+            from .cost_model import recompute_cost
+
+            got = recompute_cost(self.graph, pattern, nid,
+                                 self.info(pattern),
+                                 outputs=self.bounds(pattern).outputs)
+            self._recompute_cost[key] = got
+        return got
+
+    def reuse(self, pattern: frozenset[int], block_rows: int):
+        """Memoized stage-vs-recompute decision (``cost_model.reuse_plan``)."""
+        key = (pattern, block_rows)
+        got = self._reuse.get(key, _MISSING)
+        if got is _MISSING:
+            from .cost_model import reuse_plan
+
+            info = self.info(pattern)
+            got = (reuse_plan(self.graph, pattern, info, block_rows,
+                              self.hw, ctx=self)
+                   if info is not None else None)
+            self._reuse[key] = got
         return got
 
     def bounds(self, pattern: frozenset[int]) -> PatternBounds:
@@ -313,10 +355,17 @@ class NullContext(CostContext):
     def union(self, a, b):
         return a | b
 
-    def scratch(self, pattern, info):
+    def scratch(self, pattern, info, recompute=frozenset()):
         from .memory_planner import plan_scratch
 
-        return plan_scratch(self.graph, pattern, info)
+        return plan_scratch(self.graph, pattern, info, recompute=recompute)
+
+    def reuse(self, pattern, block_rows):
+        from .cost_model import reuse_plan
+
+        info = self.info(pattern)
+        return (reuse_plan(self.graph, pattern, info, block_rows, self.hw,
+                           ctx=self) if info is not None else None)
 
     def score(self, pattern):
         # the seed explorer memoized scores by members within one run;

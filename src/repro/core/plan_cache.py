@@ -68,10 +68,17 @@ DEFAULT_EVICT_GRACE_S = 30.0
 #: partition was never raced against the runner-up candidates, so an
 #: autotuning process degrades to re-measuring the partition and
 #: upgrades the entry in place, mirroring the v2 -> v3 path.
-FORMAT_VERSION = 4
+#: v5: per-kernel stage-vs-recompute decision (``recompute`` id list on
+#: onepass schedule records) from the thread-composition scheme.  v4
+#: entries still load in full -- plan, groups, tuned schedules and the
+#: measured-partition marker are unchanged -- but carry no recompute
+#: pins, so a onepass pin that is only feasible under recompute fails
+#: its override re-price at emission and degrades to re-deciding via
+#: the latency sweep; the entry is upgraded to v5 in place.
+FORMAT_VERSION = 5
 
 #: Formats ``entry_to_plan`` / ``entry_to_groups`` still understand.
-SUPPORTED_FORMATS = (2, 3, FORMAT_VERSION)
+SUPPORTED_FORMATS = (2, 3, 4, FORMAT_VERSION)
 
 
 # ---------------------------------------------------------------------------
@@ -267,14 +274,26 @@ def entry_to_groups(entry: dict, plan: FusionPlan, graph: Graph
 def entry_partition_source(entry: dict) -> str:
     """How the entry's stored group partition was chosen.
 
-    Only the current format records the marker; older formats predate
-    partition racing, so their partitions count as model-chosen and an
-    autotuning loader degrades to re-measuring the top-k candidates.
+    Formats >= 4 record the marker (the partition-race semantics are
+    unchanged since); older formats predate partition racing, so their
+    partitions count as model-chosen and an autotuning loader degrades
+    to re-measuring the top-k candidates.
     """
-    if isinstance(entry, dict) and entry.get("format") == FORMAT_VERSION \
+    fmt = entry.get("format") if isinstance(entry, dict) else None
+    if isinstance(fmt, int) and not isinstance(fmt, bool) and fmt >= 4 \
             and entry.get("partition_source") == "measured":
         return "measured"
     return "model"
+
+
+def override_fp(over: dict | None) -> tuple:
+    """Hashable fingerprint of a schedule override (lists -> tuples).
+
+    The one normalization point for override dicts used as cache /
+    measurement / emission-dedup keys: any future list-valued override
+    field (like ``recompute``) is handled here for every consumer."""
+    return tuple(sorted((k, tuple(v) if isinstance(v, list) else v)
+                        for k, v in (over or {}).items()))
 
 
 def _sanitize_override(rec: dict) -> dict:
@@ -287,6 +306,18 @@ def _sanitize_override(rec: dict) -> dict:
         v = rec.get(k)
         if isinstance(v, int) and not isinstance(v, bool) and v > 0:
             over[k] = v
+    recompute = rec.get("recompute")
+    if rec["schedule"] == "onepass" and isinstance(recompute, list) \
+            and recompute \
+            and all(isinstance(x, int) and not isinstance(x, bool)
+                    and x >= 0 for x in recompute):
+        from .cost_model import recompute_enabled
+
+        # with the knob off a cached recompute pin degrades to
+        # re-deciding (the staged/streaming sweep) instead of silently
+        # re-enabling the scheme.
+        if recompute_enabled():
+            over["recompute"] = sorted(set(recompute))
     return over
 
 
@@ -319,11 +350,19 @@ class PlanCache:
             except ValueError:
                 evict_grace_s = DEFAULT_EVICT_GRACE_S
         self.evict_grace_s = max(0.0, evict_grace_s)
+        #: per-instance hit/miss counters ("plan-cache exposes hit/miss
+        #: counters"): a ``load`` returning an entry counts as a hit,
+        #: anything else (absent, corrupt, wrong signature) as a miss.
+        self.hits = 0
+        self.misses = 0
 
     @classmethod
     def from_env(cls) -> "PlanCache | None":
         root = os.environ.get(ENV_DIR)
         return cls(root) if root else None
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses}
 
     def _path(self, signature: str) -> str:
         return os.path.join(self.root, f"{signature}.json")
@@ -334,13 +373,16 @@ class PlanCache:
             with open(path) as f:
                 entry = json.load(f)
         except (OSError, json.JSONDecodeError):
+            self.misses += 1
             return None
         if not isinstance(entry, dict) or entry.get("signature") != signature:
+            self.misses += 1
             return None
         try:
             os.utime(path, None)  # LRU: a hit refreshes recency
         except OSError:
             pass
+        self.hits += 1
         return entry
 
     def store(self, signature: str, entry: dict) -> None:

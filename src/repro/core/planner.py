@@ -87,6 +87,13 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
     if ctx is None:
         ctx = CostContext(graph, hw)
 
+    # caps_hit dedup: a (singleton, pattern) absorb or pattern-pair merge
+    # blocked by MAX_PATTERN is one lost exploration, however many rounds
+    # re-scan it; successful placements and non-touching scans are not
+    # truncations at all.
+    absorb_blocked: set[tuple] = set()
+    merge_blocked: set[tuple] = set()
+
     pats = [p.members for p in plan.patterns]
     for _ in range(max_rounds):
         changed = False
@@ -94,12 +101,13 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
         tmp_plan = FusionPlan([Pattern(m, 0.0) for m in pats], 0.0)
         for nid in _leftover_singletons(graph, tmp_plan):
             for i, members in enumerate(pats):
-                if len(members) >= MAX_PATTERN:
-                    continue
                 touches = (any(c in members for c in graph.consumers(nid))
                            or any(inp in members
                                   for inp in graph.node(nid).inputs))
                 if not touches:
+                    continue
+                if len(members) >= MAX_PATTERN:
+                    absorb_blocked.add((nid, members))
                     continue
                 union = ctx.union(members, frozenset({nid}))
                 if ctx.is_convex(union) and \
@@ -113,6 +121,7 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
             j = i + 1
             while j < len(pats):
                 if len(pats[i]) + len(pats[j]) > MAX_PATTERN:
+                    merge_blocked.add(frozenset((pats[i], pats[j])))
                     j += 1
                     continue
                 union = ctx.union(pats[i], pats[j])
@@ -128,6 +137,15 @@ def coalesce_plan(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
             i += 1
         if not changed:
             break
+
+    # an absorb/merge a later round completed is not a truncation
+    final = set(pats)
+    ctx.note_cap("max_pattern_absorb",
+                 sum(1 for nid, members in absorb_blocked
+                     if not any(nid in p for p in final)))
+    ctx.note_cap("max_pattern_merge",
+                 sum(1 for pair in merge_blocked
+                     if all(p in final for p in pair)))
 
     out = FusionPlan([Pattern(m, ctx.score(m)) for m in pats])
     out.total_score = sum(p.score for p in out.patterns)
@@ -276,6 +294,11 @@ class PlanStats:
     n_kernels_unfused: int      # launches op-by-op (TF analogue)
     hbm_bytes_stitched: int
     hbm_bytes_unfused: int
+    #: guardrail -> how often it truncated exploration (``MAX_PATTERN``
+    #: merges refused, top-k candidate lists cut, partition-race branch
+    #: caps...).  "No silent caps": an empty dict means every search ran
+    #: to completion.
+    caps_hit: dict = field(default_factory=dict)
 
     @property
     def kernel_reduction(self) -> float:
@@ -338,4 +361,5 @@ def plan_stats(graph: Graph, plan: FusionPlan,
         n_kernels_unfused=len(fusible) + len(opaque),
         hbm_bytes_stitched=hbm_st,
         hbm_bytes_unfused=hbm_un,
+        caps_hit=dict(getattr(ctx, "caps", {}) or {}),
     )

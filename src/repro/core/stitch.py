@@ -51,7 +51,8 @@ from .costctx import CostContext
 from .cost_model import Hardware, KernelEstimate, V5E
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, StitchGroup
 from .plan_cache import FORMAT_VERSION, PlanCache, entry_partition_source, \
-    entry_to_groups, entry_to_plan, graph_signature, plan_to_entry
+    entry_to_groups, entry_to_plan, graph_signature, override_fp, \
+    plan_to_entry
 from .planner import PlanStats, make_plan, plan_stats
 from .stitcher import search_groups
 from .tracer import bind_node, trace
@@ -87,6 +88,13 @@ class StitchReport:
     partition_candidates: int = 0    # distinct top-k partitions considered
     partition_index: int = 0         # winner's rank in the model ordering
     #                                  (> 0: silicon disagreed with the model)
+    # -- stage-vs-recompute stitching scheme (paper §4 thread composition) ---
+    n_recomputed: int = 0            # values inlined per consumer, not staged
+    recompute_bytes_freed: int = 0   # VMEM scratch bytes those flips elide
+    # -- no silent caps + cache observability --------------------------------
+    caps_hit: dict = field(default_factory=dict)  # guardrail -> truncations
+    plan_cache_hits: int = 0         # this cache instance's load hits
+    plan_cache_misses: int = 0       # ...and misses (absent/corrupt entries)
 
 
 class _Compiled:
@@ -264,7 +272,7 @@ def _emit_signature(graph: Graph, ctx: CostContext, union: frozenset[int],
             if cn.kind is OpKind.CONST and cn.value is not None:
                 _hash_const(h, i, cn.value)
     return (ctx.struct_key(union), tuple(params_fp), h.hexdigest(),
-            tuple(sorted((override or {}).items())))
+            override_fp(override))
 
 
 def _rebind_emitted(graph: Graph, ctx: CostContext, union: frozenset[int],
@@ -300,16 +308,42 @@ def _rebind_emitted(graph: Graph, ctx: CostContext, union: frozenset[int],
     return Emitted(rebound, template.kind, template.estimate, ext_ids,
                    out_ids, template.scratch_bytes,
                    template.scratch_naive_bytes, parts=parts,
-                   hbm_saved=template.hbm_saved)
+                   hbm_saved=template.hbm_saved,
+                   staged_slots=template.staged_slots,
+                   n_recomputed=template.n_recomputed,
+                   recompute_bytes_freed=template.recompute_bytes_freed)
+
+
+def _remap_override(over: dict, src_members: list[int],
+                    dst_members: list[int]) -> dict:
+    """Retarget a struct-shared schedule override to an isomorphic
+    sibling.  Node-id-specific fields (the ``recompute`` flip set) map
+    through the positional correspondence of the sorted member lists --
+    equal ``struct_key``s imply equal id-offset sequences, so sorted
+    members correspond index-by-index.  A broken correspondence drops
+    the field (degrade to re-deciding at emission), never a foreign-id
+    pin that would silently fall back yet persist as tuned."""
+    out = dict(over)
+    rec = out.get("recompute")
+    if rec:
+        pos = {nid: i for i, nid in enumerate(src_members)}
+        try:
+            out["recompute"] = sorted(dst_members[pos[int(r)]] for r in rec)
+        except (KeyError, IndexError, ValueError):
+            out.pop("recompute", None)
+    return out
 
 
 def _sched_of(est: KernelEstimate) -> dict:
-    """Persistable schedule pin of an estimate (incl. streaming tile)."""
+    """Persistable schedule pin of an estimate (incl. streaming tile and
+    the stage-vs-recompute flip set)."""
     d: dict = {"schedule": est.schedule}
     if est.block_rows > 0:
         d["block_rows"] = est.block_rows
     if est.schedule == "streaming" and est.block_cols > 0:
         d["block_cols"] = est.block_cols
+    if est.schedule == "onepass" and est.recompute_ids:
+        d["recompute"] = sorted(est.recompute_ids)
     return d
 
 
@@ -384,17 +418,22 @@ class StitchedFunction:
                 if autotune_available():
                     # isomorphic patterns (repeated layers) share one
                     # measured sweep: timing depends on structure +
-                    # shapes, not on which instance runs it.
-                    tuned_by_struct: dict[tuple, dict] = {}
+                    # shapes, not on which instance runs it.  Shared
+                    # pins are remapped to each sibling's node ids
+                    # (the recompute flip set is id-specific).
+                    tuned_by_struct: dict[tuple, tuple] = {}
                     for pat in plan.patterns:
                         skey = ctx.struct_key(pat.members)
-                        over = tuned_by_struct.get(skey)
-                        if over is None:
+                        members = sorted(pat.members)
+                        hit = tuned_by_struct.get(skey)
+                        if hit is None:
                             over = tune_pattern(graph, pat.members,
                                                 hw=self._hw,
                                                 interpret=self._interpret,
                                                 ctx=ctx) or {}
-                            tuned_by_struct[skey] = over
+                            tuned_by_struct[skey] = (over, members)
+                        else:
+                            over = _remap_override(hit[0], hit[1], members)
                         overrides.append(over)
                     autotuned = True
             if not overrides:
@@ -487,7 +526,7 @@ class StitchedFunction:
                 # isomorphic groups share one measured sweep (same
                 # rationale as emission dedup: struct_key equality means
                 # identical kernels up to constant values).
-                group_tuned_by_struct: dict[tuple, dict | None] = {}
+                group_tuned_by_struct: dict[tuple, tuple] = {}
                 for gi, grp in enumerate(groups):
                     if not grp.stitched:
                         continue  # single patterns: tune_pattern's job
@@ -500,13 +539,18 @@ class StitchedFunction:
                         group_tuned_wins += pin != analytic
                         continue
                     skey = ctx.struct_key(grp.members)
-                    if skey in group_tuned_by_struct:
-                        over = group_tuned_by_struct[skey]
+                    members = sorted(grp.members)
+                    hit = group_tuned_by_struct.get(skey)
+                    if hit is not None:
+                        # shared measured pin, remapped to this
+                        # sibling's node ids (recompute is id-specific)
+                        over = (_remap_override(hit[0], hit[1], members)
+                                if hit[0] is not None else None)
                     else:
                         over = tune_group(graph, grp.parts, hw=self._hw,
                                           interpret=self._interpret,
                                           ctx=ctx)
-                        group_tuned_by_struct[skey] = over
+                        group_tuned_by_struct[skey] = (over, members)
                     if over is None:
                         continue
                     group_tuned += 1
@@ -654,6 +698,14 @@ class StitchedFunction:
             partition_source=partition_source,
             partition_candidates=partition_candidates,
             partition_index=partition_index,
+            n_recomputed=sum(e.n_recomputed for e in emitted),
+            recompute_bytes_freed=sum(e.recompute_bytes_freed
+                                      for e in emitted),
+            caps_hit=dict(ctx.caps),
+            plan_cache_hits=(self._plan_cache.hits
+                             if self._plan_cache is not None else 0),
+            plan_cache_misses=(self._plan_cache.misses
+                               if self._plan_cache is not None else 0),
         )
 
         # determine output tree

@@ -94,6 +94,7 @@ class StitchStats:
     greedy_gain_s: float = 0.0   # what the width-1 (greedy) partition gains
     topk: int = 1                # how many candidates the search was asked for
     candidates: int = 1          # distinct candidate partitions retained
+    pair_swaps: int = 0          # multi-segment (2-swap) candidates assembled
 
 
 @dataclass
@@ -497,11 +498,20 @@ def _absorb_leftovers(graph: Graph, groups: list[list[frozenset[int]]],
 
 def _candidate_scratch_bytes(graph: Graph, ctx: CostContext,
                              groups: list[tuple]) -> int:
-    """Staged VMEM bytes/row a candidate partition would allocate."""
+    """Staged VMEM bytes/row a candidate partition would allocate.
+
+    A union whose chosen schedule recomputes interface values (the
+    thread-composition scheme) is priced by its post-flip footprint --
+    candidates only feasible under recompute rank by what they would
+    actually stage, not by the infeasible all-staged layout."""
     from .memory_planner import plan_partition_scratch
 
+    def recompute_of(union: frozenset[int]):
+        est = ctx.best(union)
+        return est.recompute_ids if est.schedule == "onepass" else ()
+
     total = 0
-    for sp in plan_partition_scratch(graph, groups, ctx.info):
+    for sp in plan_partition_scratch(graph, groups, ctx.info, recompute_of):
         if sp is not None:
             total += sp.staged_bytes_per_row
     return total
@@ -604,32 +614,60 @@ def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
         _candidate_scratch_bytes(graph, ctx, [tuple(g) for g in groups]))
     candidates = [best]
     # global runners-up: swap one segment's choice for its next-ranked
-    # alternative; a swap whose groups would double-cover a node
-    # (alternatives absorbed different leftovers than the committed
-    # partition) is skipped.  Valid swaps are ranked by modeled gain
-    # with the staged-VMEM footprint as the tie-break -- when two
-    # runners-up price identically, the one pressuring VMEM less gets
-    # the silicon slot -- and truncated to the k-1 measurement slots.
+    # alternative -- and, when several segments have alternatives,
+    # combine the rank-1 swaps of two segments at once (multi-segment
+    # swap candidates; single swaps cannot express a winner that needs
+    # both segments changed).  The pair pool is bounded by the race's
+    # ``MAX_PARTITION_BRANCHES`` so candidate assembly cannot outgrow
+    # what the silicon sweep would ever measure.  A swap whose groups
+    # would double-cover a node (alternatives absorbed different
+    # leftovers than the committed partition) is skipped.  Valid swaps
+    # are ranked by modeled gain (``CostContext.partition_gain``) with
+    # the staged-VMEM footprint as the tie-break -- when two runners-up
+    # price identically, the one pressuring VMEM less gets the silicon
+    # slot -- and truncated to the k-1 measurement slots (logged via
+    # ``ctx.note_cap``: no silent caps).
+    from .autotune import MAX_PARTITION_BRANCHES
+
+    def _assemble(choice_of: dict[int, int]) -> PartitionCandidate | None:
+        alt_groups: list[tuple] = []
+        for sj, other in enumerate(seg_choices):
+            alt_groups.extend(
+                tuple(g) for g in other[choice_of.get(sj, 0)][0])
+        members = [n for g in alt_groups for p in g for n in p]
+        if len(members) != len(set(members)):
+            return None
+        return PartitionCandidate(
+            [StitchGroup(g) for g in alt_groups],
+            ctx.partition_gain(alt_groups),
+            _candidate_scratch_bytes(graph, ctx, alt_groups))
+
     alts: list[PartitionCandidate] = []
     for si, ranked in enumerate(seg_choices):
         for ai in range(1, len(ranked)):
-            alt_groups: list[tuple] = []
-            for sj, other in enumerate(seg_choices):
-                alt_groups.extend(
-                    tuple(g) for g in
-                    (ranked[ai][0] if sj == si else other[0][0]))
-            members = [n for g in alt_groups for p in g for n in p]
-            if len(members) != len(set(members)):
-                continue
-            alts.append(PartitionCandidate(
-                [StitchGroup(g) for g in alt_groups],
-                ctx.partition_gain(alt_groups),
-                _candidate_scratch_bytes(graph, ctx, alt_groups)))
+            cand = _assemble({si: ai})
+            if cand is not None:
+                alts.append(cand)
+    swappable = [si for si, ranked in enumerate(seg_choices)
+                 if len(ranked) > 1]
+    pairs = [(si, sj) for pi, si in enumerate(swappable)
+             for sj in swappable[pi + 1:]]
+    paired = 0
+    for n_done, (si, sj) in enumerate(pairs):
+        if len(alts) >= MAX_PARTITION_BRANCHES:
+            ctx.note_cap("topk_pair_swaps", len(pairs) - n_done)
+            break
+        cand = _assemble({si: 1, sj: 1})
+        if cand is not None:
+            alts.append(cand)
+            paired += 1
     alts.sort(key=lambda c: (
         -c.gain_s, c.scratch_bytes,
         tuple(tuple(tuple(sorted(p)) for p in g.parts) for g in c.groups)))
+    ctx.note_cap("topk_candidates", len(alts) - (k - 1))
     candidates.extend(alts[:k - 1])
     stats.candidates = len(candidates)
+    stats.pair_swaps = paired
     return TopKResult(candidates, stats)
 
 
