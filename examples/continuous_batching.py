@@ -1,6 +1,9 @@
-"""Continuous-batching serving: requests of mixed lengths share a fixed
-slot pool; finished slots are refilled mid-flight without pausing
-in-flight requests.
+"""Continuous-batching serving on the stitched path: requests of mixed
+lengths share a fixed slot pool; finished slots are refilled mid-flight
+without pausing in-flight requests.  Prompt lengths canonicalize onto
+the serving bucket ladder, so the 7-length mix below compiles once per
+bucket, and prefill + the vmap'd decode wave each dispatch as one
+beam-searched, plan-cached stitched schedule.
 
     PYTHONPATH=src python examples/continuous_batching.py
 """
@@ -16,7 +19,7 @@ from repro.serving import ContinuousBatcher
 
 def main():
     cfg = get_config("llama3.2-3b").reduced()
-    mdl = build_model(cfg, fusion_mode="xla")
+    mdl = build_model(cfg)            # fusion_mode="stitched" by default
     params = mdl.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
@@ -32,11 +35,10 @@ def main():
 
     for rid in rids:
         print(f"req {rid}: {results[rid]}")
-    s = server.stats
-    print(f"\n{len(rids)} requests on {server.n_slots} slots: "
-          f"{s.prefills} prefills, {s.decode_waves} decode waves, "
-          f"{s.tokens_out} tokens in {dt:.1f}s ({s.tokens_out/dt:.1f} tok/s "
-          f"incl. compile)")
+    print(f"\n{len(rids)} requests on {server.n_slots} slots "
+          f"in {dt:.1f}s (stitched dispatch, compile counts: "
+          f"{server.compile_counts()})")
+    print(server.stats.summary())
 
 
 if __name__ == "__main__":

@@ -37,7 +37,9 @@ cutting HBM pressure at decode batch sizes.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -107,12 +109,16 @@ class _Compiled:
     prove single-dispatch behavior.  ``donate_argnums`` lists the flat
     input positions donated to XLA (inputs no schedule item reads after
     the call returns, i.e. every input that is not itself an output).
+    An explicit ``donate_argnums`` restricts donation to those flat
+    positions (serving donates the KV/SSM cache but never the params);
+    positions naming an input that is also an output are dropped.
     """
 
     def __init__(self, graph: Graph, plan: FusionPlan,
                  emitted: list[Emitted], schedule: list[tuple[str, Any]],
                  report: StitchReport, out_tree, dispatch: str = "single",
-                 donate: bool = False):
+                 donate: bool = False,
+                 donate_argnums: tuple[int, ...] | None = None):
         self.graph = graph
         self.plan = plan
         self.emitted = emitted
@@ -121,11 +127,19 @@ class _Compiled:
         self.out_tree = out_tree
         self.dispatch = dispatch
         self.exec_count = 0
+        self._race_ctx: "_RaceContext | None" = None
         self.donate_argnums: tuple[int, ...] = ()
-        if donate and dispatch == "single":
+        if dispatch == "single" and (donate or donate_argnums is not None):
             outset = set(graph.outputs)
-            self.donate_argnums = tuple(
-                i for i, nid in enumerate(graph.inputs) if nid not in outset)
+            if donate_argnums is not None:
+                self.donate_argnums = tuple(
+                    i for i in donate_argnums
+                    if 0 <= i < len(graph.inputs)
+                    and graph.inputs[i] not in outset)
+            else:
+                self.donate_argnums = tuple(
+                    i for i, nid in enumerate(graph.inputs)
+                    if nid not in outset)
         self._jitted = jax.jit(self._run_schedule,
                                donate_argnums=self.donate_argnums)
 
@@ -347,12 +361,33 @@ def _sched_of(est: KernelEstimate) -> dict:
     return d
 
 
+@dataclass
+class _RaceContext:
+    """Everything a deferred partition race needs to re-finalize a
+    compiled instance in a background thread: the traced graph, the
+    plan, the ranked candidate partitions and any schedule pins loaded
+    from the plan cache.  Held on the served ``_Compiled`` until
+    ``StitchedFunction.rerace`` consumes it."""
+    graph: Graph
+    ctx: CostContext
+    sig: str
+    plan: FusionPlan
+    overrides: list          # per-pattern schedule overrides
+    candidates: list         # ranked PartitionCandidates (model order)
+    groups: list             # the served (model-ranked) partition
+    loaded_over_by_parts: dict
+    stitch_stats: Any
+    out_tree: Any
+
+
 class StitchedFunction:
     def __init__(self, fn: Callable, *, hw: Hardware = V5E,
                  interpret: bool = True, use_remote_fusion: bool = True,
                  dispatch: str = "single", plan_cache: str | None = None,
                  autotune: bool = False, stitch_groups: bool = True,
-                 donate: bool = False):
+                 donate: bool = False,
+                 donate_argnums: tuple[int, ...] | None = None,
+                 background: Any = None):
         if dispatch not in ("single", "interpret"):
             raise ValueError(
                 f"dispatch must be 'single' or 'interpret', got {dispatch!r}")
@@ -364,9 +399,19 @@ class StitchedFunction:
         self._autotune = autotune
         self._stitch_groups = stitch_groups
         self._donate = donate
+        self._donate_argnums = (tuple(donate_argnums)
+                                if donate_argnums is not None else None)
+        #: executor with ``submit(callable)`` (serving's BackgroundTuner).
+        #: When set, a cold compile never blocks on measurement: the
+        #: analytic plan is served immediately and the top-k partition
+        #: race + group tile sweeps run via ``rerace`` on the executor,
+        #: whose winner is hot-swapped into ``_cache`` under a lock.
+        self._background = background
         self._plan_cache = (PlanCache(plan_cache) if plan_cache
                             else PlanCache.from_env())
         self._cache: dict[tuple, _Compiled] = {}
+        self._compile_lock = threading.Lock()
+        self._swap_lock = threading.Lock()
 
     def _signature(self, flat_args) -> tuple:
         return tuple((tuple(np.shape(a)), str(jnp.result_type(a)))
@@ -388,8 +433,23 @@ class StitchedFunction:
     def _compile(self, args, kwargs) -> tuple[_Compiled, Any]:
         flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
         key = self._signature(flat)
-        if key in self._cache:
-            return self._cache[key], flat
+        compiled = self._cache.get(key)
+        if compiled is not None:
+            return compiled, flat
+        submit = False
+        with self._compile_lock:
+            compiled = self._cache.get(key)
+            if compiled is None:
+                compiled = self._build(flat, in_tree)
+                self._cache[key] = compiled
+                submit = (compiled._race_ctx is not None
+                          and self._background is not None)
+        if submit:  # outside the lock: a synchronous executor must not
+            #         re-enter _compile under _compile_lock
+            self._background.submit(functools.partial(self.rerace, key))
+        return compiled, flat
+
+    def _build(self, flat, in_tree) -> _Compiled:
         t0 = time.perf_counter()
 
         def flat_fn(*fargs):
@@ -452,13 +512,15 @@ class StitchedFunction:
         group_overrides: list[dict]
         groups_from_cache = False
         stitch_stats = None
+        race_ctx: _RaceContext | None = None
         partition_source = "model"
         partition_index = 0
         partition_candidates = 0
         if self._stitch_groups:
             from .autotune import autotune_available
 
-            can_tune = self._autotune and autotune_available()
+            defer = self._background is not None
+            can_tune = (self._autotune or defer) and autotune_available()
             loaded = (entry_to_groups(entry, plan, graph)
                       if entry is not None else None)
             cached_source = (entry_partition_source(entry)
@@ -486,7 +548,24 @@ class StitchedFunction:
                 candidates = result.candidates
                 partition_candidates = len(candidates)
                 groups = result.groups
-                if can_tune and len(candidates) > 1:
+                if can_tune and defer:
+                    # cold-miss policy (paper §7 production regime):
+                    # serve the analytic (cost-model) plan NOW; the
+                    # top-k partition race and the per-group tile
+                    # sweeps run via ``rerace`` on the background
+                    # executor, whose winner is hot-swapped into the
+                    # live dispatch table and persisted.
+                    if len(candidates) > 1:
+                        partition_source = "analytic"
+                    if len(candidates) > 1 or any(g.stitched
+                                                  for g in groups):
+                        race_ctx = _RaceContext(
+                            graph=graph, ctx=ctx, sig=sig, plan=plan,
+                            overrides=overrides, candidates=candidates,
+                            groups=groups,
+                            loaded_over_by_parts=loaded_over_by_parts,
+                            stitch_stats=stitch_stats, out_tree=None)
+                elif can_tune and len(candidates) > 1:
                     from .autotune import tune_partitions
 
                     res = tune_partitions(
@@ -511,6 +590,38 @@ class StitchedFunction:
             groups = [StitchGroup((p.members,)) for p in plan.patterns]
             group_overrides = [{} for _ in groups]
 
+        # determine output tree (also needed by a deferred race rebuild)
+        out_shape = jax.eval_shape(flat_fn, *flat)
+        _, out_tree = jax.tree_util.tree_flatten(out_shape)
+        if race_ctx is not None:
+            race_ctx.out_tree = out_tree
+
+        # with a background executor, measurement never blocks the cold
+        # path: group tile sweeps run in ``rerace`` alongside the race.
+        tune_groups = self._autotune and self._background is None
+        return self._finalize(
+            graph=graph, ctx=ctx, sig=sig, plan=plan, overrides=overrides,
+            entry=entry, cached_hit=cached is not None, autotuned=autotuned,
+            groups=groups, group_overrides=group_overrides,
+            groups_from_cache=groups_from_cache, stitch_stats=stitch_stats,
+            partition_source=partition_source,
+            partition_index=partition_index,
+            partition_candidates=partition_candidates,
+            tune_groups=tune_groups, t0=t0, out_tree=out_tree,
+            race_ctx=race_ctx)
+
+    def _finalize(self, *, graph: Graph, ctx: CostContext, sig: str,
+                  plan: FusionPlan, overrides: list[dict],
+                  entry: dict | None, cached_hit: bool, autotuned: bool,
+                  groups: list[StitchGroup], group_overrides: list[dict],
+                  groups_from_cache: bool, stitch_stats,
+                  partition_source: str, partition_index: int,
+                  partition_candidates: int, tune_groups: bool, t0: float,
+                  out_tree, race_ctx: "_RaceContext | None") -> _Compiled:
+        """Group tuning + emission + plan-cache store + report: the part
+        of compilation shared by the cold path and the background
+        ``rerace`` rebuild."""
+
         # ---- measured group tuning (paper: tune the stitching scheme) -----
         # Stitched unions get their onepass/streaming phase split + tile
         # measured (batch-compiled sweep); a cache hit that already holds
@@ -519,7 +630,7 @@ class StitchedFunction:
         # re-tunes here instead of erroring.
         group_tuned = group_tuned_wins = 0
         tuned_fresh = False
-        if self._autotune and self._stitch_groups:
+        if tune_groups and self._stitch_groups:
             from .autotune import autotune_available, tune_group
 
             if autotune_available():
@@ -570,7 +681,13 @@ class StitchedFunction:
         # jit-level ``donate_argnums`` donation.
         donate_first: frozenset[int] = frozenset()
         first_idx = -1
-        if self._donate and self._dispatch == "single":
+        if (self._donate or self._donate_argnums is not None) \
+                and self._dispatch == "single":
+            # with explicit donate_argnums only those flat positions may
+            # alias (serving donates the cache, never the params).
+            allowed = (None if self._donate_argnums is None else
+                       {graph.inputs[i] for i in self._donate_argnums
+                        if 0 <= i < len(graph.inputs)})
             member_of: dict[int, int] = {}
             for gi, grp in enumerate(groups):
                 for nid in grp.members:
@@ -590,6 +707,7 @@ class StitchedFunction:
                 donate_first = frozenset(
                     i for i in graph.inputs
                     if ready and i not in outset and graph.consumers(i)
+                    and (allowed is None or i in allowed)
                     and all(c in members for c in graph.consumers(i)))
                 if not donate_first:
                     first_idx = -1
@@ -625,7 +743,7 @@ class StitchedFunction:
             emitted.append(em)
         schedule = _build_schedule(graph, emitted)
 
-        store_fresh = self._plan_cache is not None and cached is None
+        store_fresh = self._plan_cache is not None and not cached_hit
         # a cache hit whose entry lacked a usable groups section (e.g.
         # first written by a stitch_groups=False baseline run) gets the
         # freshly stitched composition written back once, so later
@@ -634,10 +752,10 @@ class StitchedFunction:
         # groups were just measured for the first time, is rewritten in
         # the current format so later processes skip the re-tune.
         store_groups_backfill = (self._plan_cache is not None
-                                 and cached is not None
+                                 and cached_hit
                                  and self._stitch_groups
                                  and (not groups_from_cache or tuned_fresh
-                                      or entry.get("format")
+                                      or (entry or {}).get("format")
                                       != FORMAT_VERSION))
         if store_fresh or store_groups_backfill:
             em_of_pattern = {em.parts[0]: em for em in emitted
@@ -664,12 +782,17 @@ class StitchedFunction:
                              else _sched_of(em.estimate)
                              for em, gover in zip(emitted, group_overrides)]
                             if self._stitch_groups else None)
+            # "analytic" is a report-level state (race pending in the
+            # background): the stored entry stays model-sourced so any
+            # later process still races it.
+            store_source = None
+            if self._stitch_groups:
+                store_source = ("model" if partition_source == "analytic"
+                                else partition_source)
             self._plan_cache.store(
                 sig, plan_to_entry(plan, schedules, sig, groups=groups_arg,
                                    group_schedules=group_scheds,
-                                   partition_source=(partition_source
-                                                     if self._stitch_groups
-                                                     else None)))
+                                   partition_source=store_source))
         plan_time = time.perf_counter() - t0
 
         stats = plan_stats(graph, plan, ctx=ctx, groups=groups)
@@ -681,7 +804,7 @@ class StitchedFunction:
             scratch_naive_bytes=sum(e.scratch_naive_bytes for e in emitted),
             plan_time_s=plan_time,
             patterns=[p.members for p in plan.patterns],
-            plan_cache_hit=cached is not None,
+            plan_cache_hit=cached_hit,
             autotuned=autotuned,
             signature=sig,
             dispatch=self._dispatch,
@@ -708,14 +831,75 @@ class StitchedFunction:
                                if self._plan_cache is not None else 0),
         )
 
-        # determine output tree
-        out_shape = jax.eval_shape(flat_fn, *flat)
-        _, out_tree = jax.tree_util.tree_flatten(out_shape)
         compiled = _Compiled(graph, plan, emitted, schedule, report,
                              out_tree, dispatch=self._dispatch,
-                             donate=self._donate)
-        self._cache[key] = compiled
-        return compiled, flat
+                             donate=self._donate,
+                             donate_argnums=self._donate_argnums)
+        compiled._race_ctx = race_ctx
+        return compiled
+
+    def rerace(self, key: tuple) -> str | None:
+        """Run the deferred measurement for ``key`` and hot-swap the
+        winner into the live dispatch table.
+
+        Called on the background executor: races the top-k candidate
+        partitions on silicon (when there is more than one), sweeps the
+        winner's group schedules, re-emits, and swaps the new compiled
+        instance in with a single dict assignment under ``_swap_lock``
+        -- in-flight calls keep executing the old instance, which stays
+        fully valid, so a wave never observes a half-built dispatch.
+        The winner persists to the plan cache (``partition_source:
+        measured``), so later processes replay it with no re-race.
+        Returns the new partition source, or None when there was
+        nothing to measure or the instance was already superseded."""
+        compiled = self._cache.get(key)
+        if compiled is None or compiled._race_ctx is None:
+            return None
+        rc = compiled._race_ctx
+        from .autotune import autotune_available, tune_partitions
+
+        if not autotune_available():
+            return None
+        t0 = time.perf_counter()
+        partition_source, partition_index, autotuned = "model", 0, False
+        groups = rc.groups
+        if len(rc.candidates) > 1:
+            res = tune_partitions(rc.graph,
+                                  [c.groups for c in rc.candidates],
+                                  hw=self._hw, interpret=self._interpret,
+                                  ctx=rc.ctx)
+            if res is not None:
+                groups = rc.candidates[res.index].groups
+                partition_source = "measured"
+                partition_index = res.index
+                autotuned = True
+        group_overrides = [dict(rc.loaded_over_by_parts.get(grp.parts, {}))
+                           for grp in groups]
+        new = self._finalize(
+            graph=rc.graph, ctx=rc.ctx, sig=rc.sig, plan=rc.plan,
+            overrides=rc.overrides, entry=None, cached_hit=False,
+            autotuned=autotuned, groups=groups,
+            group_overrides=group_overrides, groups_from_cache=False,
+            stitch_stats=rc.stitch_stats,
+            partition_source=partition_source,
+            partition_index=partition_index,
+            partition_candidates=len(rc.candidates),
+            tune_groups=True, t0=t0, out_tree=rc.out_tree, race_ctx=None)
+        with self._swap_lock:
+            if self._cache.get(key) is not compiled:
+                return None  # superseded: a newer swap already won
+            self._cache[key] = new
+        return partition_source
+
+    @property
+    def n_compiled(self) -> int:
+        """Distinct shape signatures compiled so far (serving stats)."""
+        return len(self._cache)
+
+    def reports(self) -> list[StitchReport]:
+        """Reports of every live compiled instance, in insertion order
+        (the serving layer aggregates plan-cache hit/miss from these)."""
+        return [c.report for c in self._cache.values()]
 
     def __call__(self, *args, **kwargs):
         compiled, flat = self._compile(args, kwargs)
@@ -738,7 +922,9 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                  plan_cache: str | None = None,
                  autotune: bool = False,
                  stitch_groups: bool = True,
-                 donate: bool = False) -> Callable:
+                 donate: bool = False,
+                 donate_argnums: tuple[int, ...] | None = None,
+                 background: Any = None) -> Callable:
     """Wrap ``fn`` with the FusionStitching trace->plan->stitch->emit
     pipeline.
 
@@ -748,11 +934,19 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
     stitching pass (one kernel per plan pattern -- the baseline
     ``benchmarks/bench_stitch_groups.py`` measures against).
     ``donate=True`` donates input buffers the schedule never reads again
-    (any input that is not also an output) to XLA.  ``plan_cache`` points
+    (any input that is not also an output) to XLA; ``donate_argnums``
+    instead donates only the named flat input positions (the serving
+    scheduler donates the stacked KV/SSM cache across decode waves but
+    never the params).  ``plan_cache`` points
     at a persistent plan-cache directory (defaults to
     ``$REPRO_PLAN_CACHE`` when set).  With ``autotune=True`` and an
     accelerator present, block schedules are measured instead of modeled
-    (results land in the plan cache).
+    (results land in the plan cache).  ``background`` takes an executor
+    with ``submit(callable)`` (``repro.serving.BackgroundTuner``): cold
+    compiles then serve the analytic plan immediately and the partition
+    race + group sweeps run asynchronously, hot-swapping the measured
+    winner into the dispatch table (the paper's production cold-miss
+    policy).
 
     With ``differentiable=True`` the wrapper carries a ``custom_vjp`` whose
     forward runs the stitched kernels and whose backward re-traces the VJP
@@ -766,7 +960,10 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                           use_remote_fusion=use_remote_fusion,
                           dispatch=dispatch, plan_cache=plan_cache,
                           autotune=autotune, stitch_groups=stitch_groups,
-                          donate=donate and not differentiable)
+                          donate=donate and not differentiable,
+                          donate_argnums=(donate_argnums
+                                          if not differentiable else None),
+                          background=background)
     if not differentiable:
         return sf
 

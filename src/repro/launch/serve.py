@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
       --reduced --batch 4 --prompt-len 32 --gen 16
+
+Dispatch goes through ``stitched_jit`` unless the model was built with
+``fusion_mode="xla"``; prompt and cache lengths are canonicalized onto
+the serving bucket ladder, so a mix of prompt/gen lengths compiles once
+per bucket instead of once per exact shape, and the jitted callables
+are cached per model across ``generate`` calls (no per-call retrace).
 """
 from __future__ import annotations
 
@@ -13,26 +19,66 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.stitch import stitched_jit
 from repro.models import build_model
+from repro.serving.buckets import Buckets, pad_tokens
+
+#: per-process dispatch table: (model identity, stitched, plan_cache)
+#: -> (prefill, decode).  The model object is pinned in the value so an
+#: ``id()`` can never be recycled onto a stale closure.
+_DISPATCH: dict[tuple, tuple] = {}
+
+
+def _dispatch_for(mdl, stitched: bool, plan_cache: str | None = None):
+    """The (prefill, decode) jitted pair for ``mdl`` -- cached across
+    ``generate`` calls so repeated serving never retraces."""
+    key = (id(mdl), stitched, plan_cache)
+    hit = _DISPATCH.get(key)
+    if hit is not None:
+        return hit[1], hit[2]
+
+    def prefill_fn(p, t, c):
+        return mdl.prefill(p, tokens=t, cache=c)
+
+    # kv_len = pos+1 (traced) masks the unwritten cache tail exactly: a
+    # static kv_len=max_len would let zero-keys inflate the softmax
+    # denominator, and it is also what makes bucketed cache lengths and
+    # right-padded prompts functionally inert (see serving/buckets.py).
+    def decode_fn(p, c, t, pos):
+        return mdl.decode_step(p, c, t, pos, kv_len=pos + 1)
+
+    if stitched:
+        pair = (stitched_jit(prefill_fn, plan_cache=plan_cache),
+                stitched_jit(decode_fn, plan_cache=plan_cache))
+    else:
+        pair = (jax.jit(prefill_fn), jax.jit(decode_fn))
+    _DISPATCH[key] = (mdl,) + pair
+    return pair
 
 
 def generate(mdl, params, prompts: np.ndarray, gen_len: int, *,
-             greedy: bool = True, key=None):
-    """prompts: [B, S] -> [B, S + gen_len] (greedy or sampled)."""
+             greedy: bool = True, key=None, stitched: bool | None = None,
+             buckets: Buckets | None = None, plan_cache: str | None = None):
+    """prompts: [B, S] -> [B, S + gen_len] (greedy decode)."""
     B, S = prompts.shape
-    max_len = S + gen_len
+    if stitched is None:
+        stitched = mdl.fusion_mode != "xla"
+    bk = buckets if buckets is not None else Buckets.from_env()
+    # recurrent prefill (ssm/hybrid) folds pad tokens into the state:
+    # exact prompt lengths there, bucketed everywhere else.
+    pad_ok = mdl.cfg.family not in ("ssm", "hybrid")
+    Sp = bk.bucket(S) if pad_ok else S
+    max_len = bk.bucket(max(Sp, S + gen_len))
     cache = mdl.init_cache(B, max_len)
+    prefill, decode = _dispatch_for(mdl, stitched, plan_cache)
 
-    prefill = jax.jit(lambda p, t, c: mdl.prefill(p, tokens=t, cache=c))
-    logits, cache = prefill(params, prompts, cache)
-    out = [prompts]
-    tok = jnp.argmax(logits[:, -1:, : mdl.cfg.vocab_size], axis=-1)
+    toks_in = (jnp.asarray(pad_tokens(np.asarray(prompts, np.int32), Sp))
+               if pad_ok else jnp.asarray(prompts))
+    logits, cache = prefill(params, toks_in, cache)
+    out = [np.asarray(prompts)]
+    # the true last prompt position: causal masking hides the pad tail
+    tok = jnp.argmax(logits[:, S - 1:S, : mdl.cfg.vocab_size], axis=-1)
 
-    # kv_len = pos+1 (traced) masks the unwritten cache tail exactly; a
-    # static kv_len=max_len would let zero-keys inflate the softmax
-    # denominator.
-    decode = jax.jit(
-        lambda p, c, t, pos: mdl.decode_step(p, c, t, pos, kv_len=pos + 1))
     for i in range(gen_len):
         out.append(np.asarray(tok))
         logits, cache = decode(params, cache, tok, jnp.asarray(S + i))

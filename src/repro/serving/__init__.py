@@ -1,4 +1,9 @@
-"""Serving substrate: continuous-batching scheduler."""
+"""Serving substrate: continuous batching as a client of the stitching
+compiler -- bucketed shape canonicalization, stitched prefill/decode
+dispatch, async cold-miss plan racing."""
+from .background_tune import BackgroundTuner, TuneStats
+from .buckets import Buckets, pad_tokens
 from .scheduler import ContinuousBatcher, Request, ServeStats
 
-__all__ = ["ContinuousBatcher", "Request", "ServeStats"]
+__all__ = ["BackgroundTuner", "Buckets", "ContinuousBatcher", "Request",
+           "ServeStats", "TuneStats", "pad_tokens"]

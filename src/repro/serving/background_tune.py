@@ -1,0 +1,100 @@
+"""Async cold-miss tuning: a background executor for plan racing.
+
+The paper's production policy (§7): a cache miss must not stall live
+traffic on measurement.  The serving path therefore compiles and serves
+the *analytic* (cost-model) plan immediately; the measured top-k
+partition race and per-group tile sweeps run here, on a daemon thread,
+and ``StitchedFunction.rerace`` hot-swaps the winner into the live
+dispatch table under a lock and persists it to the plan cache -- tuning
+cost amortizes across the fleet exactly as on the paper's cluster.
+
+The tuner is deliberately generic: ``submit`` takes any zero-arg
+callable returning the new partition source (or None).  A job that
+raises is recorded and dropped -- background tuning must never take the
+serving path down with it.
+"""
+from __future__ import annotations
+
+import threading
+import queue
+from dataclasses import dataclass, field
+
+_STOP = object()
+
+
+@dataclass
+class TuneStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    swaps: int = 0            # jobs that hot-swapped a rebuilt dispatch
+    measured: int = 0         # ...whose partition came from a silicon race
+    sources: list = field(default_factory=list)  # per-job return values
+
+
+class BackgroundTuner:
+    """Single daemon worker draining a FIFO of tuning jobs.
+
+    One worker, not a pool: tuning jobs compile and run kernels on the
+    same device as live traffic, so at most one background measurement
+    competes with serving at a time.
+    """
+
+    def __init__(self):
+        self.stats = TuneStats()
+        self._q: queue.Queue = queue.Queue()
+        self._cond = threading.Condition()
+        self._pending = 0
+        self._thread: threading.Thread | None = None
+
+    # -- executor protocol (StitchedFunction calls this) --------------------
+    def submit(self, job) -> None:
+        with self._cond:
+            self._pending += 1
+            self.stats.submitted += 1
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._worker, name="repro-background-tune",
+                    daemon=True)
+                self._thread.start()
+        self._q.put(job)
+
+    # -- lifecycle ----------------------------------------------------------
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every submitted job finished (tests/benchmarks;
+        production just lets the daemon run).  True if drained."""
+        with self._cond:
+            return self._cond.wait_for(lambda: self._pending == 0, timeout)
+
+    def close(self) -> None:
+        if self._thread is not None:
+            self._q.put(_STOP)
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "BackgroundTuner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker -------------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is _STOP:
+                return
+            source, failed = None, False
+            try:
+                source = job()
+            except Exception:  # noqa: BLE001 -- never kill serving
+                failed = True
+            with self._cond:
+                self._pending -= 1
+                self.stats.completed += 1
+                self.stats.failed += failed
+                self.stats.sources.append(source)
+                if source is not None:
+                    self.stats.swaps += 1
+                    self.stats.measured += source == "measured"
+                self._cond.notify_all()

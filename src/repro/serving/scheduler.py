@@ -1,4 +1,5 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving scheduler -- a client of the stitching
+compiler.
 
 vLLM-style slot management adapted to the JAX step model: a fixed pool
 of ``n_slots`` decode slots advances in lock-step (one jitted vmap'd
@@ -7,9 +8,27 @@ finished slots are refilled from the queue mid-flight via a single-slot
 prefill written into the stacked cache (no global re-batch, no pause of
 in-flight requests).
 
+Serving the compiler (paper §7, tune-once-run-many):
+
+* prefill and the decode wave dispatch through ``stitched_jit`` (unless
+  the model was built with ``fusion_mode="xla"``), so every wave runs
+  the beam-searched, plan-cached stitched schedule as ONE dispatch;
+* prompt lengths are canonicalized onto a small bucket ladder
+  (``serving.buckets``), so a Zipfian mix of live shapes collapses onto
+  a handful of plan-cache signatures -- after warmup ~every request
+  hits an already-compiled plan (padding is masked; see buckets.py);
+* the stacked KV/SSM cache is *donated* across decode waves
+  (``donate_argnums`` names the cache leaves only, never the params),
+  so XLA updates it in place instead of round-tripping through HBM;
+* with a ``BackgroundTuner``, a cold plan-cache miss serves the
+  analytic plan immediately while the top-k partition race runs in the
+  background and hot-swaps the measured winner into the live dispatch.
+
 Simplifications vs a full vLLM (documented): greedy decoding; idle slots
 still burn a decode lane (masked out functionally); prefills are
-one-slot-at-a-time (chunked-prefill interleaving is future work).
+one-slot-at-a-time (chunked-prefill interleaving is future work);
+recurrent-cache families (ssm/hybrid) keep exact prompt lengths, since
+right-padding is not inert through a recurrence.
 """
 from __future__ import annotations
 
@@ -22,7 +41,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.stitch import StitchedFunction, stitched_jit
 from repro.models.model import Model
+
+from .buckets import Buckets, pad_tokens
 
 
 @dataclass
@@ -33,6 +55,11 @@ class Request:
     out: list[int] = field(default_factory=list)
     pos: int = 0                  # next cache position
     done: bool = False
+    t_submit: float = 0.0         # perf_counter at submit (TTFT anchor)
+
+
+def _pct(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 @dataclass
@@ -41,43 +68,141 @@ class ServeStats:
     decode_waves: int = 0
     tokens_out: int = 0
     wall_s: float = 0.0
+    # -- shape canonicalization / replans ------------------------------------
+    shape_hits: int = 0        # dispatch calls on an already-compiled shape
+    shape_misses: int = 0      # ...that traced+planned fresh (replans)
+    compile_s: float = 0.0     # wall spent inside cold (first-shape) calls
+    # -- persistent plan cache (from StitchReport, stitched path only) -------
+    plan_cache_hits: int = 0   # compiled signatures loaded from disk
+    plan_cache_misses: int = 0  # ...planned from scratch
+    # -- latency samples ------------------------------------------------------
+    ttft_s: list = field(default_factory=list)   # submit -> first token
+    wave_s: list = field(default_factory=list)   # per decode wave
+    steady_wall_s: float = 0.0  # wall in warm (already-compiled) calls
+    steady_tokens: int = 0      # tokens produced by warm calls
 
     @property
     def tok_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
 
+    @property
+    def tok_per_s_steady(self) -> float:
+        """Throughput excluding compile time: tokens from warm calls
+        over warm-call wall (the fleet-amortized rate)."""
+        return (self.steady_tokens / self.steady_wall_s
+                if self.steady_wall_s else 0.0)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.shape_hits + self.shape_misses
+        return self.shape_hits / n if n else 0.0
+
+    @property
+    def replans(self) -> int:
+        return self.shape_misses
+
+    @property
+    def p50_ttft_s(self) -> float:
+        return _pct(self.ttft_s, 50)
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return _pct(self.ttft_s, 99)
+
+    @property
+    def p50_tok_s(self) -> float:
+        return _pct(self.wave_s, 50)
+
+    @property
+    def p99_tok_s(self) -> float:
+        return _pct(self.wave_s, 99)
+
+    def summary(self) -> str:
+        return (f"{self.prefills} prefills, {self.decode_waves} decode "
+                f"waves, {self.tokens_out} tokens | shape hit rate "
+                f"{self.hit_rate:.1%} ({self.replans} replans) | "
+                f"plan-cache {self.plan_cache_hits}h/"
+                f"{self.plan_cache_misses}m | ttft p50/p99 "
+                f"{self.p50_ttft_s * 1e3:.1f}/{self.p99_ttft_s * 1e3:.1f}ms"
+                f" | tok p50/p99 {self.p50_tok_s * 1e3:.1f}/"
+                f"{self.p99_tok_s * 1e3:.1f}ms | "
+                f"{self.tok_per_s:.1f} tok/s "
+                f"({self.tok_per_s_steady:.1f} steady)")
+
 
 class ContinuousBatcher:
     def __init__(self, mdl: Model, params, *, n_slots: int = 4,
-                 max_len: int = 256, eos_id: int | None = None):
+                 max_len: int = 256, eos_id: int | None = None,
+                 stitched: bool | None = None,
+                 buckets: Buckets | None = None,
+                 plan_cache: str | None = None,
+                 autotune: bool = False,
+                 background=None,
+                 donate: bool | None = None,
+                 pad_id: int = 0):
         self.mdl = mdl
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.pad_id = pad_id
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
         self._ids = itertools.count()
         self.stats = ServeStats()
+        self.stitched = (mdl.fusion_mode != "xla" if stitched is None
+                         else stitched)
+        self.buckets = buckets if buckets is not None else Buckets.from_env()
+        # right-padding is masked for attention caches but folds into a
+        # recurrent state -- exact lengths for ssm/hybrid prefill.
+        self._pad_prompts = mdl.cfg.family not in ("ssm", "hybrid")
+        # XLA ignores donation on CPU (and warns); auto-enable elsewhere.
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self._seen_shapes: set[tuple] = set()
 
         one = mdl.init_cache(1, max_len)
         self.cache = jax.tree_util.tree_map(
             lambda x: jnp.zeros((n_slots,) + x.shape, x.dtype), one)
 
-        self._prefill = jax.jit(
-            lambda p, t, c: mdl.prefill(p, tokens=t, cache=c))
+        def prefill_fn(p, t, c):
+            return mdl.prefill(p, tokens=t, cache=c)
 
-        def _decode_one(cache_slot, tok, pos):
-            logits, nc = mdl.decode_step(self.params, cache_slot, tok, pos,
+        # params are an explicit argument (NOT a closure): a closed-over
+        # pytree gets baked into the trace as embedded constants, which
+        # bloats every compile, defeats donation analysis, and silently
+        # serves stale weights after a param swap.
+        def decode_one(p, cache_slot, tok, pos):
+            logits, nc = mdl.decode_step(p, cache_slot, tok, pos,
                                          kv_len=pos + 1)
             return logits[:, -1, : mdl.cfg.vocab_size], nc
 
-        self._decode_wave = jax.jit(jax.vmap(_decode_one))
+        wave = jax.vmap(decode_one, in_axes=(None, 0, 0, 0))
+
+        if self.stitched:
+            self._prefill = stitched_jit(
+                prefill_fn, plan_cache=plan_cache, autotune=autotune,
+                background=background)
+            # donate exactly the cache leaves of the wave's flat
+            # signature (params..., cache..., toks, poss): the stacked
+            # KV/SSM cache updates in place across waves.
+            n_p = len(jax.tree_util.tree_leaves(params))
+            n_c = len(jax.tree_util.tree_leaves(self.cache))
+            self._decode_wave = stitched_jit(
+                wave, plan_cache=plan_cache, autotune=autotune,
+                background=background,
+                donate_argnums=(tuple(range(n_p, n_p + n_c))
+                                if donate else None))
+        else:
+            self._prefill = jax.jit(prefill_fn)
+            self._decode_wave = jax.jit(
+                wave, donate_argnums=(1,) if donate else ())
 
     # -- client API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
         assert len(prompt) + max_new <= self.max_len, "request exceeds slot"
-        req = Request(next(self._ids), np.asarray(prompt, np.int32), max_new)
+        req = Request(next(self._ids), np.asarray(prompt, np.int32), max_new,
+                      t_submit=time.perf_counter())
         self.queue.append(req)
         return req.rid
 
@@ -94,9 +219,45 @@ class ContinuousBatcher:
                     self.slots[i] = None
             self._fill_slots()
         self.stats.wall_s += time.perf_counter() - t0
+        self._sync_plan_reports()
         return results
 
+    def compile_counts(self) -> dict[str, int]:
+        """Distinct traced shape signatures per dispatch callable
+        (tests assert a 7-length prompt mix compiles once per bucket)."""
+        def count(fn) -> int:
+            if isinstance(fn, StitchedFunction):
+                return fn.n_compiled
+            try:
+                return fn._cache_size()
+            except Exception:  # noqa: BLE001 -- older jax without the API
+                return -1
+        return {"prefill": count(self._prefill),
+                "decode": count(self._decode_wave)}
+
     # -- internals ---------------------------------------------------------------
+    def _note_call(self, shape_key: tuple, dt: float, tokens: int) -> None:
+        if shape_key in self._seen_shapes:
+            self.stats.shape_hits += 1
+            self.stats.steady_wall_s += dt
+            self.stats.steady_tokens += tokens
+        else:
+            self._seen_shapes.add(shape_key)
+            self.stats.shape_misses += 1
+            self.stats.compile_s += dt
+
+    def _sync_plan_reports(self) -> None:
+        """Surface persistent plan-cache hit/miss from StitchReports."""
+        if not self.stitched:
+            return
+        hits = misses = 0
+        for fn in (self._prefill, self._decode_wave):
+            for rep in fn.reports():
+                hits += rep.plan_cache_hit
+                misses += not rep.plan_cache_hit
+        self.stats.plan_cache_hits = hits
+        self.stats.plan_cache_misses = misses
+
     def _fill_slots(self) -> None:
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
@@ -105,16 +266,28 @@ class ContinuousBatcher:
                 self.slots[i] = req
 
     def _prefill_slot(self, i: int, req: Request) -> None:
+        t0 = time.perf_counter()
+        true_len = len(req.prompt)
+        if self._pad_prompts:
+            plen = self.buckets.pad_len(true_len, cap=self.max_len)
+            toks = pad_tokens(req.prompt, plen, pad_id=self.pad_id)
+        else:
+            toks = req.prompt
         one = self.mdl.init_cache(1, self.max_len)
-        logits, filled = self._prefill(self.params,
-                                       req.prompt[None, :], one)
+        logits, filled = self._prefill(self.params, toks[None, :], one)
         self.cache = jax.tree_util.tree_map(
             lambda st, c: st.at[i].set(c), self.cache, filled)
-        first = int(jnp.argmax(logits[0, -1, : self.mdl.cfg.vocab_size]))
+        # the *true* last prompt position: the causal mask makes the
+        # padded tail invisible to it.
+        first = int(jnp.argmax(
+            logits[0, true_len - 1, : self.mdl.cfg.vocab_size]))
+        dt = time.perf_counter() - t0
+        self._note_call(("prefill", int(toks.shape[-1])), dt, tokens=1)
         req.out.append(first)
-        req.pos = len(req.prompt)
+        req.pos = true_len
         self.stats.prefills += 1
         self.stats.tokens_out += 1
+        self.stats.ttft_s.append(time.perf_counter() - req.t_submit)
         self._check_done(req)
 
     def _decode_step(self) -> None:
@@ -129,10 +302,14 @@ class ContinuousBatcher:
             active.append(i)
         if not active:
             return
+        t0 = time.perf_counter()
         logits, self.cache = self._decode_wave(
-            self.cache, jnp.asarray(toks), jnp.asarray(poss))
-        self.stats.decode_waves += 1
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        dt = time.perf_counter() - t0
+        self.stats.decode_waves += 1
+        self.stats.wave_s.append(dt)
+        self._note_call(("decode",), dt, tokens=len(active))
         for i in active:
             req = self.slots[i]
             req.out.append(int(nxt[i]))
