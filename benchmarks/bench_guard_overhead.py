@@ -1,0 +1,100 @@
+"""Guard-layer overhead: the fail-safe dispatch must be (nearly) free.
+
+The fallback ladder, shadow verification and quarantine machinery all
+live OFF the happy path: with ``REPRO_VERIFY=off`` and no degradation,
+a stitched call pays only a few Python-level checks (policy lookup,
+call counter, the quarantine flag) on top of the jitted dispatch.
+This bench measures exactly that delta -- the guarded ``_Compiled``
+call against the raw ``jax.jit`` dispatch it wraps -- and *asserts*
+the overhead stays under ``BUDGET_PCT`` (2%), so a regression that
+drags containment bookkeeping onto the hot path fails the suite
+instead of shipping.
+
+Timing is min-of-``REPEATS`` over ``INNER``-call batches: the minimum
+is robust to scheduler noise, which on a busy CI host dwarfs the
+microseconds under test.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StitchedFunction
+from .common import csv_row
+
+#: Maximum tolerated guarded-vs-raw dispatch overhead, percent.
+BUDGET_PCT = 2.0
+
+INNER = 30      # calls per timed batch (amortizes the clock)
+REPEATS = 7     # batches; the minimum is reported
+
+
+def _deep(x, g, b):
+    for _ in range(8):
+        m = jnp.mean(x, axis=-1, keepdims=True)
+        v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+        x = (x - m) * jax.lax.rsqrt(v + 1e-5) * g + b
+        x = jax.nn.gelu(x, approximate=True) + x
+    return x
+
+
+def _time(fn) -> float:
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(INNER):
+            out = fn()
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / INNER)
+    return best
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(7)
+    R, C = 256, 2048
+    x = rng.standard_normal((R, C)).astype(np.float32)
+    g = (np.abs(rng.standard_normal(C)) + 0.5).astype(np.float32)
+    b = rng.standard_normal(C).astype(np.float32)
+
+    sf = StitchedFunction(_deep)
+    compiled, flat = sf._compile((x, g, b), {})
+    compiled(flat)                        # warm: trace + compile off-clock
+    assert not compiled.report.fallbacks and not compiled.report.quarantined
+    assert not compiled.verify_policy.enabled  # happy path: verify off
+
+    raw_s = _time(lambda: compiled._jitted(*flat))
+    guarded_s = _time(lambda: compiled(flat))
+    overhead_pct = (guarded_s / raw_s - 1.0) * 100.0
+
+    rows = [
+        csv_row("guard_raw_dispatch", raw_s * 1e6,
+                f"jitted schedule only, {R}x{C} fp32 8-layer chain"),
+        csv_row("guard_guarded_dispatch", guarded_s * 1e6,
+                f"ladder+verify+quarantine checks armed, verify off; "
+                f"overhead={max(overhead_pct, 0.0):.3f}pct "
+                f"(budget {BUDGET_PCT:g}pct)"),
+    ]
+    assert overhead_pct < BUDGET_PCT, (
+        f"guard happy-path overhead {overhead_pct:.2f}% exceeds the "
+        f"{BUDGET_PCT:g}% budget: containment bookkeeping leaked onto "
+        f"the hot dispatch path")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    import json as _json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT.json")
+    args = ap.parse_args()
+    rows = run()
+    for r in rows:
+        print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            _json.dump({"schema": 1, "suite": "guard_overhead",
+                        "budget_pct": BUDGET_PCT, "rows": rows}, f, indent=1)

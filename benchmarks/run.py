@@ -58,15 +58,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["fig1", "table2", "fig7", "overhead", "roofline",
                              "plan_time", "stitch_groups", "beam_stitch",
-                             "topk_tune", "recompute", "serving"])
+                             "topk_tune", "recompute", "serving",
+                             "guard_overhead"])
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write structured per-row records")
     args = ap.parse_args()
 
     from . import (bench_beam_stitch, bench_fig1_layernorm,
-                   bench_fig7_speedup, bench_overhead, bench_plan_time,
-                   bench_recompute, bench_serving, bench_stitch_groups,
-                   bench_table2_breakdown, bench_topk_tune, roofline)
+                   bench_fig7_speedup, bench_guard_overhead, bench_overhead,
+                   bench_plan_time, bench_recompute, bench_serving,
+                   bench_stitch_groups, bench_table2_breakdown,
+                   bench_topk_tune, roofline)
 
     suites = {
         "fig1": bench_fig1_layernorm.run,
@@ -80,6 +82,7 @@ def main() -> None:
         "topk_tune": bench_topk_tune.run,
         "recompute": bench_recompute.run,
         "serving": bench_serving.run,
+        "guard_overhead": bench_guard_overhead.run,
     }
     selected = [args.only] if args.only else list(suites)
 

@@ -32,6 +32,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.runtime.guard import RaceTimeoutError, race_timeout_s, \
+    watchdog_cancelled, watchdog_sleep, with_watchdog
+from repro.testing import faults as _faults
+
 from .codegen import _override_estimate, emit_group, emit_pattern, \
     pattern_emittable
 from .cost_model import BLOCK_ROWS, STREAM_TILES, Hardware, V5E
@@ -191,6 +195,18 @@ def _emit_candidates(info, emit,
     return cands
 
 
+def _sane_timing(t) -> bool:
+    """A usable sample: finite, non-negative, an actual number.  A
+    branch that reports NaN/inf/negative wall time (a poisoned clock, a
+    garbage test fake, an overflowed delta) is disqualified rather than
+    allowed to win the race with a nonsense number."""
+    try:
+        t = float(t)
+    except (TypeError, ValueError):
+        return False
+    return np.isfinite(t) and t >= 0.0
+
+
 def _measure_serial(cands, graph: Graph, rng) -> dict | None:
     """Today's-baseline sweep: per-candidate dummy inputs + warmup +
     timing, one candidate at a time (no shared compilation)."""
@@ -202,6 +218,8 @@ def _measure_serial(cands, graph: Graph, rng) -> dict | None:
                                key=override_fp(over))
         except Exception:  # noqa: BLE001
             continue
+        if not _sane_timing(t):
+            continue  # garbage timing: disqualify, don't abort the race
         if t < best_t:
             best_t, best_over = t, over
     return best_over
@@ -347,6 +365,8 @@ def _measure_switch_branches(fns, args, keys,
                                              warmup=1, iters=1, key=keys[k])
             except Exception:  # noqa: BLE001
                 continue
+    # NaN/inf/negative samples disqualify their branch, never the race
+    screened = {k: t for k, t in screened.items() if _sane_timing(t)}
     if not screened:
         return None
     refined: set[int] = set()
@@ -356,6 +376,8 @@ def _measure_switch_branches(fns, args, keys,
         if fnk is None:  # amortized screening: compile the finalist only
             fnk = branch_fn[k] = _compile(fns[k], *args)
         t = _time_callable(fnk, args, warmup=1, iters=2, key=keys[k])
+        if not _sane_timing(t):
+            raise ValueError(f"garbage refinement timing {t!r}")
         # the amortized timestamp delta is a different methodology
         # (callback spacing, clamped at 0): a spuriously low value must
         # be REPLACED by the refined standalone timing, not min-ed with
@@ -762,10 +784,52 @@ def tune_partitions(graph: Graph, candidates, *, hw: Hardware = V5E,
         swaps = [br for br in branches if br.assignment]
         branches = (base + swaps)[:MAX_PARTITION_BRANCHES]
 
+    # -- fault containment ---------------------------------------------------
+    # ``race_crash``: one branch's runner is replaced with a raiser; the
+    # measurement layer must disqualify it (batch poisoning falls back
+    # to the serial loop; the serial loop times the survivors) and the
+    # race commits a winner from the healthy branches.
+    crash = _faults.fire("race_crash")
+    if crash is not None:
+        try:
+            idx = int(crash.params.get("branch", 0)) % len(branches)
+        except (TypeError, ValueError):
+            idx = 0
+
+        def _crashed_runner(*_a):
+            raise RuntimeError("injected race_crash branch failure")
+
+        # unique mkey/tkey: the crashed branch must be its own
+        # measurement representative, never shared with healthy
+        # isomorphic siblings.
+        branches[idx] = _Branch(branches[idx].ci, branches[idx].assignment,
+                                _crashed_runner, ("injected_crash", idx),
+                                ("injected_crash", idx))
+
     rng = np.random.default_rng(0)
     args = _dummy_inputs(graph, ext_ids, rng)
-    times = _measure_partition_branches(branches, args,
-                                        batch_compile=batch_compile)
+
+    def _measured():
+        # ``tuner_hang``: a wedged measurement, contained by the watchdog
+        hang = _faults.fire("tuner_hang")
+        if hang is not None:
+            watchdog_sleep(hang.sleep_s())
+        if watchdog_cancelled():
+            # the caller already timed out and moved on: do NOT start
+            # device work from an abandoned thread (it would race live
+            # traffic -- and interpreter shutdown).
+            return None
+        return _measure_partition_branches(branches, args,
+                                           batch_compile=batch_compile)
+
+    try:
+        times = with_watchdog(_measured, race_timeout_s(),
+                              label="partition race")
+    except RaceTimeoutError:
+        # a wedged race disqualifies itself: the caller serves the
+        # model ranking; the timeout is recorded, never silent.
+        ctx.note_cap("race_timeout", 1)
+        return None
     if times is None:
         return None
 

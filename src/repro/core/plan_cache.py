@@ -26,6 +26,16 @@ Enable by exporting ``REPRO_PLAN_CACHE=/path/to/dir`` (or passing
 ``plan_cache=`` to ``stitched_jit``).  A stale or corrupt entry never
 breaks compilation: validation falls back to re-planning (or, for a
 bad groups section alone, to re-running just the stitcher).
+
+Integrity (fail-safe compilation): every stored entry carries a
+``checksum`` over its canonical JSON, writes go through a temp file +
+atomic ``os.replace`` so a concurrent reader can never observe a torn
+entry, and a file that is truncated, unparseable, or fails its
+checksum is *quarantined* (moved to ``<root>/quarantine/``) rather
+than crashed on or silently retried forever.  Signatures condemned by
+shadow verification live on the cache's ``poison`` list
+(``guard.PoisonList``): loads treat them as misses and stores refuse
+them, so a quarantined plan is never re-persisted.
 """
 from __future__ import annotations
 
@@ -35,7 +45,20 @@ import os
 import tempfile
 import time
 
+from repro.runtime.guard import CacheCorruptError, PoisonList
+from repro.testing import faults as _faults
+
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, Pattern, StitchGroup
+
+
+def entry_checksum(entry: dict) -> str:
+    """sha256 over the entry's canonical JSON (sans the checksum field
+    itself): the integrity seal every store writes and every load
+    verifies, so a torn or tampered file can never decode into a plan."""
+    body = {k: v for k, v in entry.items() if k != "checksum"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True,
+                   separators=(",", ":")).encode()).hexdigest()
 
 #: Environment variable holding the cache root directory.
 ENV_DIR = "REPRO_PLAN_CACHE"
@@ -355,6 +378,13 @@ class PlanCache:
         #: anything else (absent, corrupt, wrong signature) as a miss.
         self.hits = 0
         self.misses = 0
+        #: corrupt files moved aside (truncated / unparseable / bad
+        #: checksum) and the last such error, for observability.
+        self.quarantined = 0
+        self.last_error: str = ""
+        #: signatures condemned by shadow verification: loads miss,
+        #: stores refuse.  Shared across processes via the cache dir.
+        self.poison = PoisonList(root)
 
     @classmethod
     def from_env(cls) -> "PlanCache | None":
@@ -362,20 +392,56 @@ class PlanCache:
         return cls(root) if root else None
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses}
+        return {"hits": self.hits, "misses": self.misses,
+                "quarantined": self.quarantined,
+                "poisoned": len(self.poison)}
 
     def _path(self, signature: str) -> str:
         return os.path.join(self.root, f"{signature}.json")
 
+    def _quarantine(self, path: str, err: Exception) -> None:
+        """Move a corrupt file aside (never delete evidence, never let
+        it be retried on every load) and record the failure."""
+        e = CacheCorruptError(
+            f"{os.path.basename(path)}: {type(err).__name__}: {err}")
+        self.last_error = str(e)
+        self.quarantined += 1
+        try:
+            qdir = os.path.join(self.root, "quarantine")
+            os.makedirs(qdir, exist_ok=True)
+            os.replace(path, os.path.join(
+                qdir, f"{os.path.basename(path)}.{int(time.time() * 1e3)}"))
+        except OSError:
+            try:  # last resort: a corrupt entry must not shadow a re-store
+                os.unlink(path)
+            except OSError:
+                pass
+
     def load(self, signature: str) -> dict | None:
+        if signature in self.poison:
+            self.misses += 1  # quarantined plan: never served from disk
+            return None
         path = self._path(signature)
         try:
             with open(path) as f:
-                entry = json.load(f)
-        except (OSError, json.JSONDecodeError):
+                raw = f.read()
+        except OSError:  # absent (or unreadable): a plain miss
             self.misses += 1
             return None
-        if not isinstance(entry, dict) or entry.get("signature") != signature:
+        try:
+            entry = json.loads(raw)
+            if not isinstance(entry, dict):
+                raise ValueError("entry is not a JSON object")
+            if entry.get("signature") != signature:
+                raise ValueError("entry signature does not match filename")
+            stored_sum = entry.get("checksum")
+            if stored_sum is not None \
+                    and stored_sum != entry_checksum(entry):
+                raise ValueError("checksum mismatch (torn or tampered)")
+        except (json.JSONDecodeError, ValueError) as e:
+            # corrupt/truncated/unparseable: quarantine, degrade to a
+            # miss -- the caller re-plans, compilation never crashes.
+            self._quarantine(path, e)
             self.misses += 1
             return None
         try:
@@ -386,15 +452,32 @@ class PlanCache:
         return entry
 
     def store(self, signature: str, entry: dict) -> None:
+        if signature in self.poison:
+            return  # a quarantined plan is never re-persisted
+        entry = dict(entry)
+        entry["checksum"] = entry_checksum(entry)
+        payload = json.dumps(entry, indent=1)
+        fault = _faults.fire("cache_corrupt", signature=signature)
+        if fault is not None:  # simulate a torn write reaching disk
+            payload = payload[: max(1, len(payload) // 2)]
         try:
             os.makedirs(self.root, exist_ok=True)
             fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
             with os.fdopen(fd, "w") as f:
-                json.dump(entry, f, indent=1)
+                f.write(payload)
             os.replace(tmp, self._path(signature))  # atomic on POSIX
         except OSError:
             return  # a read-only cache dir must never break compilation
         self._evict()
+
+    def evict_entry(self, signature: str) -> bool:
+        """Drop one entry (quarantine flow: the plan failed shadow
+        verification and must not be served to any later process)."""
+        try:
+            os.unlink(self._path(signature))
+            return True
+        except OSError:
+            return False
 
     def _evict(self) -> None:
         """Drop the oldest entries beyond ``max_entries`` (best-effort).
@@ -414,7 +497,8 @@ class PlanCache:
             now = time.time()
             aged: list[tuple[float, str]] = []
             for name in os.listdir(self.root):
-                if not name.endswith(".json"):
+                if not name.endswith(".json") \
+                        or name == PoisonList.FILENAME:
                     continue
                 path = os.path.join(self.root, name)
                 try:

@@ -48,7 +48,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codegen import Emitted, emit_group
+from repro.runtime.guard import EmitError, GuardError, PoisonList, \
+    RUNG_BASELINE, RUNG_PATTERNS, RUNG_STITCHED, RUNGS, VerifyPolicy, \
+    outputs_mismatch
+from repro.testing import faults as _faults
+
+from .codegen import Emitted, emit_group, emit_pattern
 from .costctx import CostContext
 from .cost_model import Hardware, KernelEstimate, V5E
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, StitchGroup
@@ -97,6 +102,16 @@ class StitchReport:
     caps_hit: dict = field(default_factory=dict)  # guardrail -> truncations
     plan_cache_hits: int = 0         # this cache instance's load hits
     plan_cache_misses: int = 0       # ...and misses (absent/corrupt entries)
+    # -- fail-safe compilation (fallback ladder + shadow verification) -------
+    fallbacks: list = field(default_factory=list)
+    #                                  (group_id, rung, reason) per
+    #                                  degradation; group_id -1 = whole
+    #                                  dispatch (exec failure / verify
+    #                                  mismatch / poisoned signature)
+    rung: str = RUNG_STITCHED        # coarsest active dispatch rung
+    verified: int = 0                # executions shadow-verified vs XLA
+    verify_failures: int = 0         # ...that mismatched (-> quarantine)
+    quarantined: bool = False        # plan evicted + signature poisoned
 
 
 class _Compiled:
@@ -112,13 +127,25 @@ class _Compiled:
     An explicit ``donate_argnums`` restricts donation to those flat
     positions (serving donates the KV/SSM cache but never the params);
     positions naming an input that is also an output are dropped.
+
+    Fail-safe execution (the guard layer): every instance carries a
+    lazily-jitted *baseline* -- the plain per-node XLA replay of the
+    traced graph, no pallas, no donation.  ``REPRO_VERIFY`` shadow-runs
+    it against the stitched dispatch; a mismatch (or a dispatch that
+    raises) quarantines the instance: it pins itself to the baseline,
+    records the degradation on its report and invokes ``on_quarantine``
+    so the owner can evict + poison the plan-cache entry.  The call
+    still returns a correct result -- degradation is recorded, never
+    silent, and never an exception on the serving path.
     """
 
     def __init__(self, graph: Graph, plan: FusionPlan,
                  emitted: list[Emitted], schedule: list[tuple[str, Any]],
                  report: StitchReport, out_tree, dispatch: str = "single",
                  donate: bool = False,
-                 donate_argnums: tuple[int, ...] | None = None):
+                 donate_argnums: tuple[int, ...] | None = None,
+                 verify_policy: VerifyPolicy | None = None,
+                 on_quarantine: Callable | None = None):
         self.graph = graph
         self.plan = plan
         self.emitted = emitted
@@ -127,6 +154,11 @@ class _Compiled:
         self.out_tree = out_tree
         self.dispatch = dispatch
         self.exec_count = 0
+        self.call_count = 0           # __call__ invocations (verify sampling)
+        self.verify_policy = verify_policy or VerifyPolicy("off")
+        self.on_quarantine = on_quarantine
+        self._use_baseline = False    # quarantined / poisoned: baseline rung
+        self._baseline_fn = None      # lazily jitted XLA reference
         self._race_ctx: "_RaceContext | None" = None
         self.donate_argnums: tuple[int, ...] = ()
         if dispatch == "single" and (donate or donate_argnums is not None):
@@ -164,11 +196,89 @@ class _Compiled:
                     env[oid] = val
         return tuple(env[o] for o in graph.outputs)
 
+    def _run_baseline(self, *flat_args):
+        """Plain XLA replay of the traced graph: no pallas kernels, no
+        donation.  The ladder's last rung and the shadow-verification
+        reference."""
+        graph = self.graph
+        env: dict[int, Any] = dict(zip(graph.inputs, flat_args))
+        for nid in graph.topo_order():
+            if nid in env:
+                continue
+            node = graph.node(nid)
+            if node.kind is OpKind.CONST:
+                env[nid] = node.value
+                continue
+            ins = [env[i] if i in env else graph.node(i).value
+                   for i in node.inputs]
+            env[nid] = bind_node(node, ins)
+        return tuple(env[o] for o in graph.outputs)
+
+    @property
+    def _baseline(self):
+        if self._baseline_fn is None:
+            self._baseline_fn = jax.jit(self._run_baseline)
+        return self._baseline_fn
+
+    def _quarantine(self, reason: str) -> None:
+        """Pin this instance to the baseline rung and tell the owner to
+        evict + poison the persisted plan.  Never raises: quarantine is
+        containment, not a second failure mode."""
+        self._use_baseline = True
+        self.report.quarantined = True
+        self.report.rung = RUNG_BASELINE
+        self.report.fallbacks.append((-1, RUNG_BASELINE, reason))
+        if self.on_quarantine is not None:
+            try:
+                self.on_quarantine(reason)
+            except Exception:  # noqa: BLE001 - eviction failure must not
+                pass           # take down the already-degraded dispatch
+
+    def pin_baseline(self, reason: str) -> None:
+        """Pre-pin to the baseline rung (signature poisoned by an
+        earlier quarantine): the stitched dispatch is never attempted."""
+        self._use_baseline = True
+        self.report.rung = RUNG_BASELINE
+        self.report.fallbacks.append((-1, RUNG_BASELINE, reason))
+
     def __call__(self, flat_args):
-        if self.dispatch == "single":
-            flat_out = self._jitted(*flat_args)
-        else:
+        if self.dispatch != "single":
             flat_out = self._run_schedule(*flat_args)
+            return jax.tree_util.tree_unflatten(self.out_tree,
+                                                list(flat_out))
+        if self._use_baseline:
+            flat_out = self._baseline(*flat_args)
+            return jax.tree_util.tree_unflatten(self.out_tree,
+                                                list(flat_out))
+        policy = self.verify_policy
+        verify = policy.enabled and policy.should_verify(self.call_count)
+        self.call_count += 1
+        ref = None
+        if verify:
+            # the stitched call may donate its inputs: the reference
+            # must consume them first.
+            ref = self._baseline(*flat_args)
+        try:
+            flat_out = self._jitted(*flat_args)
+        except Exception as e:  # noqa: BLE001 - contained: baseline rung
+            self._quarantine(f"dispatch failed: {type(e).__name__}: {e}")
+            if ref is None:
+                try:
+                    ref = self._baseline(*flat_args)
+                except Exception as e2:  # noqa: BLE001
+                    raise GuardError(
+                        "stitched dispatch failed and the baseline replay "
+                        f"could not run (inputs donated?): {e2}") from e
+            return jax.tree_util.tree_unflatten(self.out_tree, list(ref))
+        if ref is not None:
+            self.report.verified += 1
+            reason = outputs_mismatch(ref, flat_out)
+            if _faults.fire("numeric_mismatch") is not None:
+                reason = reason or "injected numeric_mismatch"
+            if reason is not None:
+                self.report.verify_failures += 1
+                self._quarantine(f"shadow verification mismatch: {reason}")
+                flat_out = ref  # serve the reference, not the mismatch
         return jax.tree_util.tree_unflatten(self.out_tree, list(flat_out))
 
 
@@ -409,6 +519,12 @@ class StitchedFunction:
         self._background = background
         self._plan_cache = (PlanCache(plan_cache) if plan_cache
                             else PlanCache.from_env())
+        #: quarantine pins shared with the persistent cache (or process
+        #: local when no cache dir is configured): a signature whose
+        #: stitched dispatch ever failed verification stays on the
+        #: baseline rung until the pin is lifted.
+        self._poison = (self._plan_cache.poison
+                        if self._plan_cache is not None else PoisonList())
         self._cache: dict[tuple, _Compiled] = {}
         self._compile_lock = threading.Lock()
         self._swap_lock = threading.Lock()
@@ -446,7 +562,13 @@ class StitchedFunction:
                           and self._background is not None)
         if submit:  # outside the lock: a synchronous executor must not
             #         re-enter _compile under _compile_lock
-            self._background.submit(functools.partial(self.rerace, key))
+            job = functools.partial(self.rerace, key)
+            try:
+                # keyed submission lets the tuner's circuit breaker skip
+                # a signature whose race keeps crashing
+                self._background.submit(job, key=key)
+            except TypeError:  # executor protocol: plain submit(job)
+                self._background.submit(job)
         return compiled, flat
 
     def _build(self, flat, in_tree) -> _Compiled:
@@ -713,6 +835,42 @@ class StitchedFunction:
                     first_idx = -1
 
         # ---- emission (isomorphic groups emitted once, rebound after) -----
+        # Each group descends the fallback ladder on emission failure:
+        # stitched megakernel -> one fused kernel per member pattern ->
+        # plain packed (XLA) lowering of the union -> bare per-node
+        # schedule entries.  A degraded group never degrades its
+        # neighbors, and every rung taken is recorded on the report.
+        fallbacks: list[tuple[int, str, str]] = []
+
+        def _emit_fallback(gi: int, grp, exc: BaseException) -> list[Emitted]:
+            reason = f"{type(exc).__name__}: {exc}"
+            if len(grp.parts) > 1:
+                try:
+                    ems = [emit_group(graph, (part,), hw=self._hw,
+                                      interpret=self._interpret, ctx=ctx,
+                                      schedule_override=(
+                                          dict(pat_over.get(frozenset(part),
+                                                            {})) or None))
+                           for part in grp.parts]
+                    fallbacks.append((gi, RUNG_PATTERNS, reason))
+                    return ems
+                except Exception:  # noqa: BLE001 - descend one more rung
+                    pass
+            try:
+                ems = [emit_pattern(graph, frozenset(grp.members),
+                                    hw=self._hw, interpret=self._interpret,
+                                    force_packed=True, ctx=ctx)]
+                fallbacks.append((gi, RUNG_BASELINE, reason))
+                return ems
+            except Exception as exc2:  # noqa: BLE001 - last rung: the
+                # members run as bare per-node schedule entries (the
+                # interpreter path _build_schedule keeps for uncovered
+                # nodes) -- slow, still correct.
+                fallbacks.append((gi, RUNG_BASELINE,
+                                  f"{reason}; packed emission also failed "
+                                  f"({type(exc2).__name__}: {exc2})"))
+                return []
+
         emit_cache: dict[tuple, tuple[Emitted, list[int]]] = {}
         emitted: list[Emitted] = []
         reused = 0
@@ -732,18 +890,37 @@ class StitchedFunction:
                 if em is not None:
                     reused += 1
             if em is None:
-                em = emit_group(graph, grp.parts, hw=self._hw,
-                                interpret=self._interpret, ctx=ctx,
-                                schedule_override=over or None,
-                                donate_into=donate_into)
+                try:
+                    flt = _faults.fire("emit_fail", group=gi)
+                    if flt is not None:
+                        raise EmitError(f"injected emit_fail on group {gi}")
+                    em = emit_group(graph, grp.parts, hw=self._hw,
+                                    interpret=self._interpret, ctx=ctx,
+                                    schedule_override=over or None,
+                                    donate_into=donate_into)
+                except Exception as exc:  # noqa: BLE001 - ladder below
+                    for fem in _emit_fallback(gi, grp, exc):
+                        fem._members = sorted(  # type: ignore[attr-defined]
+                            n for p in fem.parts for n in p)
+                        emitted.append(fem)
+                    continue
                 ext_set = set(em.ext_ids)
                 emit_cache[ekey] = (em, _ext_seen_order(graph, union,
                                                         ext_set))
             em._members = sorted(union)  # type: ignore[attr-defined]
             emitted.append(em)
         schedule = _build_schedule(graph, emitted)
+        rung = RUNG_STITCHED
+        for _gi, r, _r in fallbacks:
+            if RUNGS.index(r) > RUNGS.index(rung):
+                rung = r
 
-        store_fresh = self._plan_cache is not None and not cached_hit
+        # a degraded compile must not persist: the stored plan would
+        # replay the very emission that just failed (and the schedules
+        # below assume one emitted kernel per group).
+        poisoned = self._poison.rung_for(sig) is not None
+        store_fresh = (self._plan_cache is not None and not cached_hit
+                       and not fallbacks and not poisoned)
         # a cache hit whose entry lacked a usable groups section (e.g.
         # first written by a stitch_groups=False baseline run) gets the
         # freshly stitched composition written back once, so later
@@ -754,6 +931,7 @@ class StitchedFunction:
         store_groups_backfill = (self._plan_cache is not None
                                  and cached_hit
                                  and self._stitch_groups
+                                 and not fallbacks and not poisoned
                                  and (not groups_from_cache or tuned_fresh
                                       or (entry or {}).get("format")
                                       != FORMAT_VERSION))
@@ -829,13 +1007,30 @@ class StitchedFunction:
                              if self._plan_cache is not None else 0),
             plan_cache_misses=(self._plan_cache.misses
                                if self._plan_cache is not None else 0),
+            fallbacks=list(fallbacks),
+            rung=rung,
         )
+
+        def _on_quarantine(reason: str, _sig=sig) -> None:
+            # a verified-bad (or crashing) plan must never be served or
+            # re-persisted again: evict the live cache entry and pin the
+            # signature so every later compile lands on the baseline.
+            if self._plan_cache is not None:
+                self._plan_cache.evict_entry(_sig)
+            self._poison.pin(_sig, RUNG_BASELINE, reason)
 
         compiled = _Compiled(graph, plan, emitted, schedule, report,
                              out_tree, dispatch=self._dispatch,
                              donate=self._donate,
-                             donate_argnums=self._donate_argnums)
-        compiled._race_ctx = race_ctx
+                             donate_argnums=self._donate_argnums,
+                             verify_policy=VerifyPolicy.from_env(),
+                             on_quarantine=_on_quarantine)
+        if poisoned:
+            compiled.pin_baseline(
+                "signature poisoned: "
+                + (self._poison.reason_for(sig) or "unspecified"))
+        else:
+            compiled._race_ctx = race_ctx
         return compiled
 
     def rerace(self, key: tuple) -> str | None:
@@ -856,6 +1051,9 @@ class StitchedFunction:
         if compiled is None or compiled._race_ctx is None:
             return None
         rc = compiled._race_ctx
+        if compiled._use_baseline \
+                or self._poison.rung_for(rc.sig) is not None:
+            return None  # quarantined/poisoned: nothing worth racing
         from .autotune import autotune_available, tune_partitions
 
         if not autotune_available():
@@ -888,6 +1086,8 @@ class StitchedFunction:
         with self._swap_lock:
             if self._cache.get(key) is not compiled:
                 return None  # superseded: a newer swap already won
+            if compiled._use_baseline:
+                return None  # quarantined mid-race: keep the baseline pin
             self._cache[key] = new
         return partition_source
 

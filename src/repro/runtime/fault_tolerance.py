@@ -5,8 +5,13 @@ restarts from the latest complete checkpoint; (b) a worker straggles ->
 the step deadline monitor flags it and the runbook action is applied;
 (c) capacity changes -> the job resumes on a different mesh (elastic
 reshard via ``checkpoint.reshard``).  This module implements the
-host-side control logic; it is exercised on CPU by simulating failures
-(see tests/test_fault_tolerance.py) and is mesh-size agnostic.
+host-side control logic on top of the shared containment primitives in
+``runtime.guard``: restarts back off exponentially (``RetryPolicy``)
+and repeated failures of the *same* step trip a circuit breaker
+(``CircuitBreaker``) instead of crash-looping forever -- the same
+policy the serving tuner applies to a signature that keeps crashing
+its race.  Exercised on CPU by simulating failures; mesh-size
+agnostic.
 """
 from __future__ import annotations
 
@@ -15,6 +20,8 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 from repro.checkpoint import manager as ckpt
+
+from .guard import CircuitBreaker, GuardError, RetryPolicy
 
 
 @dataclass
@@ -93,3 +100,45 @@ class RestartableLoop:
         if saver:
             saver.wait()
         return state, monitor
+
+    def run_with_restarts(self, state, data, step_fn: Callable,
+                          n_steps: int, *, max_restarts: int = 3,
+                          retry: RetryPolicy | None = None,
+                          fail_at: int | None = None,
+                          on_step: Callable | None = None,
+                          on_restart: Callable | None = None):
+        """``run`` under the guard containment policy: a crash restores
+        the latest complete checkpoint and retries with exponential
+        backoff, up to ``max_restarts`` times.
+
+        A circuit breaker keyed on the restored step catches the
+        deterministic-poison case (the job dies at the same step every
+        time -- a bad batch, a corrupt shard): once the same resume
+        point fails ``max_restarts`` consecutive times the loop stops
+        retrying and raises :class:`GuardError` with the original
+        failure chained, instead of crash-looping on a failure no
+        restart can fix.  ``on_restart(attempt, exc)`` observes each
+        restart (tests, fleet telemetry).
+        """
+        retry = retry or RetryPolicy(max_retries=max_restarts)
+        breaker = CircuitBreaker(threshold=max_restarts)
+        attempt = 0
+        # consume the injected failure only on the first attempt: the
+        # restart must demonstrate recovery, not re-trip the fault.
+        inject = fail_at
+        while True:
+            resume = ckpt.latest_step(self.directory) or 0
+            try:
+                return self.run(state, data, step_fn, n_steps,
+                                fail_at=inject, on_step=on_step)
+            except Exception as e:  # noqa: BLE001 - contained below
+                inject = None
+                if breaker.record_failure(resume) \
+                        or attempt >= max_restarts:
+                    raise GuardError(
+                        f"training loop exhausted {attempt} restart(s) "
+                        f"from step {resume}") from e
+                if on_restart is not None:
+                    on_restart(attempt, e)
+                time.sleep(retry.delay(attempt))
+                attempt += 1

@@ -1,0 +1,442 @@
+"""Fault containment for the stitching compiler and serving path.
+
+The paper's deployment claim (4+ months unattended, ~30k tasks/month)
+rests on one property our pipeline must share: a bad fusion decision
+degrades into a slower-but-correct execution, never a failed task.
+This module centralizes everything that property needs:
+
+* **Error taxonomy** -- ``GuardError`` and its subclasses let callers
+  and tests catch by class instead of string-matching messages.
+* **Fallback ladder** -- the rung names (``stitched`` -> ``patterns``
+  -> ``baseline``) and the ``FallbackRecord`` shape that
+  ``StitchReport.fallbacks`` records, so no degradation is silent.
+* **Shadow verification** -- ``VerifyPolicy`` (driven by
+  ``$REPRO_VERIFY``: ``off`` | ``first`` | ``sample``) decides which
+  executions of a freshly-compiled plan are checked against the plain
+  XLA reference, with per-dtype tolerances (``outputs_mismatch``).
+* **Poison list** -- ``PoisonList`` pins a quarantined graph signature
+  to a fallback rung, in memory and (when a plan-cache dir exists) on
+  disk, so a plan that failed verification is never served stitched or
+  re-persisted by any process sharing the cache.
+* **Watchdog** -- ``with_watchdog`` bounds a measured race
+  (``$REPRO_RACE_TIMEOUT_S``); a wedged measurement raises
+  ``RaceTimeoutError`` instead of hanging the tuner thread forever.
+* **Retry/backoff + circuit breaker** -- ``RetryPolicy`` and
+  ``CircuitBreaker`` are shared by the background tuner (retry a failed
+  race, stop re-racing a signature after K consecutive failures) and
+  the restartable training loop.
+
+Only stdlib + numpy at import time; jax is imported lazily where
+needed, so any layer can import the taxonomy without cost.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+class GuardError(RuntimeError):
+    """Base class for every failure the guard layer contains."""
+
+
+class EmitError(GuardError):
+    """Group/pattern emission failed (e.g. a Pallas lowering error)."""
+
+
+class CacheCorruptError(GuardError):
+    """A plan-cache entry was torn, truncated or failed its checksum."""
+
+
+class RaceTimeoutError(GuardError):
+    """A measured race exceeded the watchdog deadline."""
+
+
+class VerifyMismatchError(GuardError):
+    """Shadow verification found the stitched output diverging from the
+    XLA reference beyond the per-dtype tolerance."""
+
+
+# ---------------------------------------------------------------------------
+# fallback ladder
+# ---------------------------------------------------------------------------
+#: Rung 0: the stitched megakernel (one pallas_call per group).
+RUNG_STITCHED = "stitched"
+#: Rung 1: per-pattern fused kernels (the group's members emitted
+#: separately -- stitching lost, fusion kept).
+RUNG_PATTERNS = "patterns"
+#: Rung 2: the plain XLA / interpret baseline (no Pallas at all).
+RUNG_BASELINE = "baseline"
+
+#: Ladder order, fastest first.  Degradation only ever moves right.
+RUNGS = (RUNG_STITCHED, RUNG_PATTERNS, RUNG_BASELINE)
+
+
+@dataclass(frozen=True)
+class FallbackRecord:
+    """One recorded degradation: which group, to which rung, and why.
+
+    ``group_id`` is the group's index in the compiled schedule, or -1
+    when the whole dispatch (not one group) degraded -- a first-execution
+    failure, a verification mismatch, or a poisoned signature.
+    """
+
+    group_id: int
+    rung: str
+    reason: str
+
+    def as_tuple(self) -> tuple[int, str, str]:
+        return (self.group_id, self.rung, self.reason)
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+#: Environment variable bounding one measured race, in seconds.
+#: 0 (or negative) disables the watchdog.
+ENV_RACE_TIMEOUT = "REPRO_RACE_TIMEOUT_S"
+
+#: Default measured-race deadline.  Races batch-compile one switch over
+#: all branches; minutes of compile are normal, a wedge is not.
+DEFAULT_RACE_TIMEOUT_S = 300.0
+
+
+def race_timeout_s() -> float:
+    try:
+        return float(os.environ.get(ENV_RACE_TIMEOUT,
+                                    DEFAULT_RACE_TIMEOUT_S))
+    except ValueError:
+        return DEFAULT_RACE_TIMEOUT_S
+
+
+_watchdog_local = threading.local()
+
+
+def watchdog_cancelled() -> bool:
+    """True inside a ``with_watchdog`` body whose caller already gave
+    up on it.  Long-running watched work (a sleep loop, a sweep over
+    many branches) should poll this at safe points and bail out, so an
+    abandoned thread winds down instead of racing interpreter shutdown
+    with device work."""
+    ev = getattr(_watchdog_local, "cancelled", None)
+    return ev is not None and ev.is_set()
+
+
+def watchdog_sleep(seconds: float, step_s: float = 0.05) -> None:
+    """``time.sleep`` in watchdog-aware slices: returns early once the
+    surrounding watchdog abandoned this thread."""
+    deadline = time.monotonic() + seconds
+    while time.monotonic() < deadline:
+        if watchdog_cancelled():
+            return
+        time.sleep(min(step_s, max(0.0, deadline - time.monotonic())))
+
+
+def with_watchdog(fn, timeout_s: float | None = None, *,
+                  label: str = "measured race"):
+    """Run ``fn()`` with a deadline; raise :class:`RaceTimeoutError` if
+    it does not finish in ``timeout_s`` seconds.
+
+    The work runs on a daemon thread so a wedged ``fn`` cannot block
+    interpreter shutdown; on timeout the thread is abandoned (Python
+    cannot kill it) and the *caller* regains control -- which is the
+    property the tuner needs: a hung race disqualifies itself instead
+    of wedging the worker.  Abandonment is signalled to the thread via
+    :func:`watchdog_cancelled` so cooperative work can stop early.
+    ``timeout_s`` None reads the environment; <= 0 disables the
+    watchdog and calls ``fn`` inline.
+    """
+    if timeout_s is None:
+        timeout_s = race_timeout_s()
+    if timeout_s <= 0:
+        return fn()
+    box: dict = {}
+    cancelled = threading.Event()
+
+    def run() -> None:
+        _watchdog_local.cancelled = cancelled
+        try:
+            if not cancelled.is_set():
+                box["value"] = fn()
+        except BaseException as e:  # noqa: BLE001 - re-raised below
+            box["error"] = e
+        finally:
+            _watchdog_local.cancelled = None
+
+    t = threading.Thread(target=run, name="repro-watchdog", daemon=True)
+    t.start()
+    t.join(timeout_s)
+    if t.is_alive():
+        cancelled.set()
+        raise RaceTimeoutError(
+            f"{label} exceeded the {timeout_s:g}s watchdog deadline")
+    if "error" in box:
+        raise box["error"]
+    return box.get("value")
+
+
+# ---------------------------------------------------------------------------
+# shadow verification
+# ---------------------------------------------------------------------------
+#: ``off`` (default): never verify.  ``first``: verify the first N
+#: executions of every freshly-compiled plan.  ``sample``: verify the
+#: first execution plus every Kth after it.
+ENV_VERIFY = "REPRO_VERIFY"
+
+#: N for ``first`` mode.
+ENV_VERIFY_N = "REPRO_VERIFY_N"
+DEFAULT_VERIFY_N = 2
+
+#: K for ``sample`` mode (every Kth execution, deterministic).
+ENV_VERIFY_SAMPLE = "REPRO_VERIFY_SAMPLE"
+DEFAULT_VERIFY_SAMPLE = 16
+
+#: Per-dtype (rtol, atol) for the stitched-vs-XLA comparison.  Stitched
+#: kernels reassociate reductions and fuse through intermediate
+#: roundings, so low-precision dtypes get proportionally wider bands.
+VERIFY_TOLERANCES: dict[str, tuple[float, float]] = {
+    "float64": (1e-9, 1e-9),
+    "float32": (2e-4, 2e-4),
+    "bfloat16": (2e-2, 2e-2),
+    "float16": (4e-3, 4e-3),
+}
+
+
+@dataclass
+class VerifyPolicy:
+    """Which executions of a compiled plan get shadow-verified."""
+
+    mode: str = "off"
+    first_n: int = DEFAULT_VERIFY_N
+    sample_every: int = DEFAULT_VERIFY_SAMPLE
+
+    @classmethod
+    def from_env(cls) -> "VerifyPolicy":
+        mode = os.environ.get(ENV_VERIFY, "off").strip().lower()
+        if mode not in ("off", "first", "sample"):
+            mode = "off"
+
+        def _int(env: str, default: int) -> int:
+            try:
+                return max(1, int(os.environ.get(env, default)))
+            except ValueError:
+                return default
+
+        return cls(mode=mode,
+                   first_n=_int(ENV_VERIFY_N, DEFAULT_VERIFY_N),
+                   sample_every=_int(ENV_VERIFY_SAMPLE,
+                                     DEFAULT_VERIFY_SAMPLE))
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
+    def should_verify(self, exec_index: int) -> bool:
+        """``exec_index`` counts executions of one compiled instance
+        from 0 (so a hot-swapped rebuild re-verifies from scratch)."""
+        if self.mode == "first":
+            return exec_index < self.first_n
+        if self.mode == "sample":
+            return exec_index == 0 or (exec_index % self.sample_every) == 0
+        return False
+
+
+def tolerance_for(dtype) -> tuple[float, float]:
+    return VERIFY_TOLERANCES.get(str(np.dtype(dtype) if dtype else dtype),
+                                 VERIFY_TOLERANCES["float32"])
+
+
+def _is_float_dtype(dtype) -> bool:
+    # ml_dtypes extension types (bfloat16, fp8) are not np.floating
+    # subdtypes; anything with a tolerance band counts as float here.
+    return (np.issubdtype(dtype, np.floating)
+            or str(dtype) in VERIFY_TOLERANCES)
+
+
+def outputs_mismatch(ref_leaves, got_leaves) -> str | None:
+    """Compare two flat output tuples; None on match, else a reason.
+
+    Per-dtype tolerances for floats; exact equality for integer/bool
+    leaves.  NaNs must agree positionally (``equal_nan``): the stitched
+    kernel inventing *new* NaNs is exactly the bug this catches.
+    """
+    ref_leaves = list(ref_leaves)
+    got_leaves = list(got_leaves)
+    if len(ref_leaves) != len(got_leaves):
+        return (f"output arity {len(got_leaves)} != reference "
+                f"{len(ref_leaves)}")
+    for i, (r, g) in enumerate(zip(ref_leaves, got_leaves)):
+        r = np.asarray(r)
+        g = np.asarray(g)
+        if r.shape != g.shape:
+            return f"output {i}: shape {g.shape} != reference {r.shape}"
+        if r.dtype != g.dtype:
+            return f"output {i}: dtype {g.dtype} != reference {r.dtype}"
+        if _is_float_dtype(r.dtype):
+            rtol, atol = tolerance_for(r.dtype)
+            ok = np.allclose(r.astype(np.float64), g.astype(np.float64),
+                             rtol=rtol, atol=atol, equal_nan=True)
+        else:
+            ok = bool(np.array_equal(r, g))
+        if not ok:
+            if _is_float_dtype(r.dtype):
+                diff = np.abs(r.astype(np.float64) - g.astype(np.float64))
+                finite = diff[np.isfinite(diff)]
+                worst = float(finite.max()) if finite.size else float("nan")
+                return (f"output {i} ({r.dtype}): max abs diff {worst:.3e} "
+                        f"exceeds tolerance")
+            return f"output {i} ({r.dtype}): values differ"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# poison list
+# ---------------------------------------------------------------------------
+class PoisonList:
+    """Quarantined graph signatures pinned to a fallback rung.
+
+    When shadow verification (or a first-execution failure) condemns a
+    plan, its signature lands here: later compiles of the same signature
+    go straight to the pinned rung, and the plan cache refuses to load
+    or store entries for it -- the bad plan can never be re-persisted or
+    re-served stitched.
+
+    With ``root`` set the list is shared across processes via an
+    atomically-rewritten ``poison.json`` in that directory (the plan
+    cache dir); without it the list is in-memory only.  File IO is
+    best-effort: a read-only dir degrades to in-memory pinning, never
+    to an exception on the serving path.
+    """
+
+    FILENAME = "poison.json"
+
+    def __init__(self, root: str | None = None):
+        self.root = root
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict] = {}
+        self._load()
+
+    def _path(self) -> str | None:
+        return os.path.join(self.root, self.FILENAME) if self.root else None
+
+    def _load(self) -> None:
+        path = self._path()
+        if path is None:
+            return
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError, ValueError):
+            return
+        entries = data.get("entries") if isinstance(data, dict) else None
+        if isinstance(entries, dict):
+            self._entries.update(
+                {str(k): v for k, v in entries.items()
+                 if isinstance(v, dict) and v.get("rung") in RUNGS})
+
+    def _save(self) -> None:
+        path = self._path()
+        if path is None:
+            return
+        try:
+            os.makedirs(self.root, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump({"format": 1, "entries": self._entries}, f,
+                          indent=1)
+            os.replace(tmp, path)  # atomic: readers never see a torn list
+        except OSError:
+            pass  # read-only dir: in-memory pinning still holds
+
+    def pin(self, signature: str, rung: str = RUNG_BASELINE,
+            reason: str = "") -> None:
+        if rung not in RUNGS:
+            rung = RUNG_BASELINE
+        with self._lock:
+            # re-read first so concurrent pinners merge, not clobber
+            self._load()
+            self._entries[signature] = {"rung": rung, "reason": reason,
+                                        "time": time.time()}
+            self._save()
+
+    def rung_for(self, signature: str) -> str | None:
+        with self._lock:
+            e = self._entries.get(signature)
+            return e.get("rung") if e else None
+
+    def reason_for(self, signature: str) -> str:
+        with self._lock:
+            e = self._entries.get(signature)
+            return e.get("reason", "") if e else ""
+
+    def __contains__(self, signature: str) -> bool:
+        return self.rung_for(signature) is not None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# retry + circuit breaker (tuner, restartable loop)
+# ---------------------------------------------------------------------------
+@dataclass
+class RetryPolicy:
+    """Bounded exponential backoff."""
+
+    max_retries: int = 2
+    backoff_s: float = 0.05
+    max_backoff_s: float = 2.0
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (0-based)."""
+        return min(self.backoff_s * (2.0 ** attempt), self.max_backoff_s)
+
+
+class CircuitBreaker:
+    """Per-key consecutive-failure breaker.
+
+    After ``threshold`` consecutive failures for a key the circuit
+    opens: ``is_open`` returns True and the caller should stop retrying
+    that key (the tuner keeps serving the analytic plan instead of
+    re-racing a signature that keeps crashing the measurement).  A
+    success resets the key's count.
+    """
+
+    def __init__(self, threshold: int = 3):
+        self.threshold = max(1, threshold)
+        self._lock = threading.Lock()
+        self._consecutive: dict = {}
+        self._open: set = set()
+
+    def record_failure(self, key) -> bool:
+        """Count one failure; True if this failure opened the circuit."""
+        with self._lock:
+            n = self._consecutive.get(key, 0) + 1
+            self._consecutive[key] = n
+            if n >= self.threshold and key not in self._open:
+                self._open.add(key)
+                return True
+            return False
+
+    def record_success(self, key) -> None:
+        with self._lock:
+            self._consecutive.pop(key, None)
+            self._open.discard(key)
+
+    def is_open(self, key) -> bool:
+        with self._lock:
+            return key in self._open
+
+    @property
+    def open_count(self) -> int:
+        with self._lock:
+            return len(self._open)

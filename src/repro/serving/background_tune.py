@@ -9,15 +9,32 @@ dispatch table under a lock and persists it to the plan cache -- tuning
 cost amortizes across the fleet exactly as on the paper's cluster.
 
 The tuner is deliberately generic: ``submit`` takes any zero-arg
-callable returning the new partition source (or None).  A job that
-raises is recorded and dropped -- background tuning must never take the
-serving path down with it.
+callable returning the new partition source (or None).  Background
+tuning must never take the serving path down with it, so failures are
+*contained*, not propagated (``runtime.guard`` policies):
+
+* a job that raises is retried in place with exponential backoff
+  (``RetryPolicy``) before being recorded as failed and dropped --
+  transient compiler/device hiccups don't forfeit the measurement;
+* jobs submitted under a ``key`` (the compiled-shape key) trip a
+  per-key ``CircuitBreaker`` after repeated failures: later jobs for a
+  signature whose race keeps crashing are skipped outright instead of
+  burning device time crash-looping;
+* an optional ``job_timeout_s`` watchdog bounds any single job (a hung
+  race abandons the attempt instead of wedging the worker);
+* failure count + last error string surface on ``TuneStats`` (and from
+  there onto the serving ``ServeStats``), and ``close`` takes a bounded
+  timeout so shutdown never hangs behind a wedged job.
 """
 from __future__ import annotations
 
 import threading
+import time
 import queue
 from dataclasses import dataclass, field
+
+from repro.runtime.guard import CircuitBreaker, RaceTimeoutError, \
+    RetryPolicy, with_watchdog
 
 _STOP = object()
 
@@ -25,10 +42,13 @@ _STOP = object()
 @dataclass
 class TuneStats:
     submitted: int = 0
-    completed: int = 0
-    failed: int = 0
+    completed: int = 0        # jobs that ran to an outcome (ok or failed)
+    failed: int = 0           # jobs whose every attempt raised
+    retries: int = 0          # extra attempts spent on flaky jobs
+    skipped: int = 0          # jobs dropped by an open circuit breaker
     swaps: int = 0            # jobs that hot-swapped a rebuilt dispatch
     measured: int = 0         # ...whose partition came from a silicon race
+    last_error: str = ""      # most recent job failure, for ServeStats
     sources: list = field(default_factory=list)  # per-job return values
 
 
@@ -37,18 +57,28 @@ class BackgroundTuner:
 
     One worker, not a pool: tuning jobs compile and run kernels on the
     same device as live traffic, so at most one background measurement
-    competes with serving at a time.
+    competes with serving at a time.  ``retry`` and ``breaker_threshold``
+    set the containment policy; ``job_timeout_s`` (None: unbounded)
+    abandons any single attempt that hangs longer.
     """
 
-    def __init__(self):
+    def __init__(self, *, retry: RetryPolicy | None = None,
+                 breaker_threshold: int = 3,
+                 job_timeout_s: float | None = None):
         self.stats = TuneStats()
+        self.retry = retry or RetryPolicy()
+        self.breaker = CircuitBreaker(threshold=breaker_threshold)
+        self.job_timeout_s = job_timeout_s
         self._q: queue.Queue = queue.Queue()
         self._cond = threading.Condition()
         self._pending = 0
         self._thread: threading.Thread | None = None
 
     # -- executor protocol (StitchedFunction calls this) --------------------
-    def submit(self, job) -> None:
+    def submit(self, job, key=None) -> None:
+        """Enqueue ``job``.  ``key`` (optional) identifies the compiled
+        shape it tunes: consecutive failures under one key open a
+        circuit breaker that skips that key's later jobs."""
         with self._cond:
             self._pending += 1
             self.stats.submitted += 1
@@ -57,7 +87,7 @@ class BackgroundTuner:
                     target=self._worker, name="repro-background-tune",
                     daemon=True)
                 self._thread.start()
-        self._q.put(job)
+        self._q.put((job, key))
 
     # -- lifecycle ----------------------------------------------------------
     def drain(self, timeout: float | None = None) -> bool:
@@ -66,11 +96,17 @@ class BackgroundTuner:
         with self._cond:
             return self._cond.wait_for(lambda: self._pending == 0, timeout)
 
-    def close(self) -> None:
-        if self._thread is not None:
-            self._q.put(_STOP)
-            self._thread.join(timeout=5.0)
-            self._thread = None
+    def close(self, timeout: float = 5.0) -> bool:
+        """Stop the worker, waiting at most ``timeout`` seconds.  A
+        worker wedged inside a job is abandoned (it is a daemon thread)
+        rather than waited on forever; returns False in that case."""
+        if self._thread is None:
+            return True
+        self._q.put((_STOP, None))
+        self._thread.join(timeout=timeout)
+        stopped = not self._thread.is_alive()
+        self._thread = None
+        return stopped
 
     def __enter__(self) -> "BackgroundTuner":
         return self
@@ -79,22 +115,59 @@ class BackgroundTuner:
         self.close()
 
     # -- worker -------------------------------------------------------------
-    def _worker(self) -> None:
-        while True:
-            job = self._q.get()
-            if job is _STOP:
-                return
-            source, failed = None, False
-            try:
-                source = job()
-            except Exception:  # noqa: BLE001 -- never kill serving
-                failed = True
-            with self._cond:
-                self._pending -= 1
+    def _run_once(self, job):
+        if self.job_timeout_s is not None:
+            return with_watchdog(job, self.job_timeout_s,
+                                 label="background tune job")
+        return job()
+
+    def _finish(self, source, *, failed=False, skipped=False,
+                retries=0, error="") -> None:
+        with self._cond:
+            self._pending -= 1
+            self.stats.retries += retries
+            if skipped:
+                self.stats.skipped += 1
+            else:
                 self.stats.completed += 1
                 self.stats.failed += failed
-                self.stats.sources.append(source)
-                if source is not None:
-                    self.stats.swaps += 1
-                    self.stats.measured += source == "measured"
-                self._cond.notify_all()
+            if error:
+                self.stats.last_error = error
+            self.stats.sources.append(source)
+            if source is not None:
+                self.stats.swaps += 1
+                self.stats.measured += source == "measured"
+            self._cond.notify_all()
+
+    def _worker(self) -> None:
+        while True:
+            job, key = self._q.get()
+            if job is _STOP:
+                return
+            if key is not None and self.breaker.is_open(key):
+                self._finish(None, skipped=True)
+                continue
+            source, error = None, ""
+            for attempt in range(self.retry.max_retries + 1):
+                try:
+                    source = self._run_once(job)
+                    error = ""
+                    if key is not None:
+                        self.breaker.record_success(key)
+                    break
+                except RaceTimeoutError as e:
+                    # a hung attempt left its thread behind: retrying
+                    # would stack another one on a busy device -- record
+                    # and move on.
+                    error = f"{type(e).__name__}: {e}"
+                    break
+                except Exception as e:  # noqa: BLE001 -- never kill serving
+                    error = f"{type(e).__name__}: {e}"
+                    if attempt < self.retry.max_retries:
+                        time.sleep(self.retry.delay(attempt))
+            else:
+                attempt = self.retry.max_retries
+            if error and key is not None:
+                self.breaker.record_failure(key)
+            self._finish(source, failed=bool(error), retries=attempt,
+                         error=error)

@@ -75,6 +75,13 @@ class ServeStats:
     # -- persistent plan cache (from StitchReport, stitched path only) -------
     plan_cache_hits: int = 0   # compiled signatures loaded from disk
     plan_cache_misses: int = 0  # ...planned from scratch
+    # -- guard layer (fallback ladder / verification / background tuner) -----
+    fallbacks: int = 0         # degradations recorded across live plans
+    quarantined: int = 0       # plans pinned to the XLA baseline rung
+    verified: int = 0          # dispatches shadow-verified against XLA
+    verify_failures: int = 0   # ...that mismatched
+    tuner_failed: int = 0      # background tuning jobs that failed
+    tuner_last_error: str = ""  # most recent tuner failure, verbatim
     # -- latency samples ------------------------------------------------------
     ttft_s: list = field(default_factory=list)   # submit -> first token
     wave_s: list = field(default_factory=list)   # per decode wave
@@ -160,6 +167,7 @@ class ContinuousBatcher:
         if donate is None:
             donate = jax.default_backend() != "cpu"
         self._seen_shapes: set[tuple] = set()
+        self._background = background  # tuner stats surface on ServeStats
 
         one = mdl.init_cache(1, max_len)
         self.cache = jax.tree_util.tree_map(
@@ -247,16 +255,33 @@ class ContinuousBatcher:
             self.stats.compile_s += dt
 
     def _sync_plan_reports(self) -> None:
-        """Surface persistent plan-cache hit/miss from StitchReports."""
+        """Surface persistent plan-cache hit/miss and guard-layer
+        degradations (fallback rungs, quarantines, shadow-verification
+        counters, background-tuner failures) from StitchReports: a
+        contained failure never raises on the serving path, so the
+        stats are where an operator learns it happened."""
         if not self.stitched:
             return
         hits = misses = 0
+        fallbacks = quarantined = verified = verify_failures = 0
         for fn in (self._prefill, self._decode_wave):
             for rep in fn.reports():
                 hits += rep.plan_cache_hit
                 misses += not rep.plan_cache_hit
+                fallbacks += len(rep.fallbacks)
+                quarantined += rep.quarantined
+                verified += rep.verified
+                verify_failures += rep.verify_failures
         self.stats.plan_cache_hits = hits
         self.stats.plan_cache_misses = misses
+        self.stats.fallbacks = fallbacks
+        self.stats.quarantined = quarantined
+        self.stats.verified = verified
+        self.stats.verify_failures = verify_failures
+        tstats = getattr(self._background, "stats", None)
+        if tstats is not None:
+            self.stats.tuner_failed = getattr(tstats, "failed", 0)
+            self.stats.tuner_last_error = getattr(tstats, "last_error", "")
 
     def _fill_slots(self) -> None:
         for i in range(self.n_slots):

@@ -1,0 +1,5 @@
+"""Test-support utilities: deterministic fault injection for the
+fail-safe compilation pipeline (``repro.testing.faults``)."""
+from . import faults
+
+__all__ = ["faults"]

@@ -285,6 +285,7 @@ def test_v2_entry_degrades_to_retune(tmp_path, monkeypatch):
     with open(path) as f:
         entry = json.load(f)
     entry["format"] = 2                    # downgrade: strip v3-only bits
+    entry.pop("checksum", None)            # pre-checksum era had none
     for r in entry["groups"]:
         r.pop("tuned", None)
     with open(path, "w") as f:

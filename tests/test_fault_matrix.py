@@ -1,0 +1,117 @@
+"""Fault-injection matrix: every injection point, forced once, against
+the full trace -> plan -> stitch -> emit -> dispatch pipeline.
+
+Each case asserts the guard layer's contract end-to-end: the pipeline
+*completes*, the output is numerically correct, and the degradation (if
+the fault reached a degrading seam) is recorded on the report -- never
+a crash, never a silent wrong answer.
+
+CI runs this file once per point with ``REPRO_FAULTS=<point>`` exported
+(the fault-injection leg); locally, with no ``REPRO_FAULTS`` set, the
+whole matrix runs parametrized.  A set ``REPRO_FAULTS`` narrows the
+matrix to the armed point so the CI leg proves the *environment* path
+(spec parsed from the variable), not just the programmatic one.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StitchedFunction
+from repro.core.plan_cache import PlanCache
+from repro.runtime import RUNG_BASELINE, RUNG_STITCHED
+from repro.testing import faults
+
+rng = np.random.default_rng(31)
+
+
+def _ln(x, g, b):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * g + b
+
+
+def _deep(x, g, b):
+    for _ in range(8):
+        x = _ln(x, g, b)
+        x = jax.nn.gelu(x, approximate=True) + x
+    return x
+
+
+def _args(R=16, C=256):
+    return (rng.standard_normal((R, C)).astype(np.float32),
+            (np.abs(rng.standard_normal(C)) + 0.5).astype(np.float32),
+            rng.standard_normal(C).astype(np.float32))
+
+
+#: Per-point pipeline knobs: the environment each fault needs to reach
+#: its seam (a race fault needs a race; a verify fault needs verification).
+_KNOBS = {
+    "emit_fail": {},
+    "cache_corrupt": {},
+    "race_crash": {"REPRO_AUTOTUNE": "force"},
+    "numeric_mismatch": {"REPRO_VERIFY": "first"},
+    "tuner_hang": {"REPRO_AUTOTUNE": "force", "REPRO_RACE_TIMEOUT_S": "1",
+                   "_sleep": "4"},
+}
+
+
+@pytest.mark.parametrize("point", faults.POINTS)
+def test_fault_matrix_pipeline_completes_correctly(point, monkeypatch,
+                                                   tmp_path):
+    env_spec = os.environ.get(faults.ENV_FAULTS, "").strip()
+    if env_spec:
+        armed = {s.partition(":")[0].strip() for s in env_spec.split(";")}
+        if point not in armed:
+            pytest.skip(f"CI leg armed {sorted(armed)}, not {point}")
+
+    knobs = dict(_KNOBS[point])
+    sleep = knobs.pop("_sleep", None)
+    for k, v in knobs.items():
+        monkeypatch.setenv(k, v)
+    spec = point if sleep is None else f"{point}:sleep={sleep}"
+    if not env_spec:
+        monkeypatch.setenv(faults.ENV_FAULTS, spec)
+    faults.reset()  # (re)arm from the environment -- the CI-leg path
+    assert faults.armed(point)
+
+    args = _args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+    autotune = knobs.get("REPRO_AUTOTUNE") == "force"
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path),
+                          autotune=autotune)
+    out = sf(*args)
+    out2 = sf(*args)                       # recovery path runs clean too
+    rep = sf.reports()[0]
+
+    for o in (out, out2):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    fired = faults._active().get(point)
+    assert fired is not None and fired.fired >= 1, \
+        f"{point} never reached its injection seam"
+
+    if point == "emit_fail":
+        assert rep.fallbacks and rep.rung != RUNG_STITCHED
+        assert PlanCache(str(tmp_path)).load(rep.signature) is None
+    elif point == "cache_corrupt":
+        # torn store: the next process quarantines the entry and misses
+        pc = PlanCache(str(tmp_path))
+        assert pc.load(rep.signature) is None
+        assert pc.quarantined == 1
+    elif point == "numeric_mismatch":
+        assert rep.quarantined and rep.verify_failures >= 1
+        assert rep.rung == RUNG_BASELINE
+        pc = PlanCache(str(tmp_path))
+        assert pc.load(rep.signature) is None      # evicted...
+        assert rep.signature in pc.poison          # ...and never re-pinned
+    elif point == "tuner_hang":
+        assert rep.partition_source == "model"     # race abandoned
+        assert rep.caps_hit.get("race_timeout") == 1
+    elif point == "race_crash":
+        assert not rep.quarantined                 # race survived the crash
+
+    faults.reset("")  # disarm: later tests must not inherit the spec

@@ -1,0 +1,532 @@
+"""Fail-safe compilation tests: the guard layer's fallback ladder,
+shadow verification + quarantine, plan-cache integrity, tuner
+resilience, and the deterministic fault-injection harness that drives
+them (``repro.testing.faults``).
+
+The invariant under test everywhere: an injected failure anywhere in
+trace -> plan -> stitch -> emit -> race -> dispatch still yields a
+numerically correct result, the degradation is recorded on the report
+(never silent), and a plan proven bad is never served or re-persisted.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CostContext, StitchedFunction, make_plan, \
+    search_groups, trace
+from repro.core.autotune import tune_partitions
+from repro.core.plan_cache import PlanCache, entry_checksum
+from repro.runtime import (CacheCorruptError, CircuitBreaker, EmitError,
+                           FallbackRecord, GuardError, PoisonList,
+                           RaceTimeoutError, RestartableLoop, RetryPolicy,
+                           RUNG_BASELINE, RUNG_PATTERNS, RUNG_STITCHED,
+                           RUNGS, VerifyMismatchError, VerifyPolicy,
+                           outputs_mismatch, with_watchdog)
+from repro.serving import BackgroundTuner
+from repro.testing import faults
+
+rng = np.random.default_rng(23)
+
+
+def _ln(x, g, b):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * g + b
+
+
+def _deep(x, g, b):
+    for _ in range(8):
+        x = _ln(x, g, b)
+        x = jax.nn.gelu(x, approximate=True) + x
+    return x
+
+
+def _three(x, y, z, g, b):
+    """Three deep chains on distinct row counts: row-incompatible, so
+    the stitcher forms (at least) three separate stitch groups."""
+    return _deep(x, g, b), _deep(y, g, b), _deep(z, g, b)
+
+
+C = 512
+
+
+def _three_args():
+    g = (np.abs(rng.standard_normal(C)) + 0.5).astype(np.float32)
+    b = rng.standard_normal(C).astype(np.float32)
+    return (rng.standard_normal((64, C)).astype(np.float32),
+            rng.standard_normal((32, C)).astype(np.float32),
+            rng.standard_normal((16, C)).astype(np.float32), g, b)
+
+
+def _deep_args(R=16, Cc=256):
+    return (rng.standard_normal((R, Cc)).astype(np.float32),
+            (np.abs(rng.standard_normal(Cc)) + 0.5).astype(np.float32),
+            rng.standard_normal(Cc).astype(np.float32))
+
+
+def _assert_close(out, ref, tol=2e-4):
+    for o, r in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=tol, atol=tol)
+
+
+# -- error taxonomy -----------------------------------------------------------
+def test_error_taxonomy():
+    for exc in (EmitError, CacheCorruptError, RaceTimeoutError,
+                VerifyMismatchError):
+        assert issubclass(exc, GuardError)
+    assert issubclass(GuardError, RuntimeError)
+    assert RUNGS == (RUNG_STITCHED, RUNG_PATTERNS, RUNG_BASELINE)
+    rec = FallbackRecord(2, RUNG_PATTERNS, "boom")
+    assert rec.as_tuple() == (2, "patterns", "boom")
+
+
+# -- fault harness ------------------------------------------------------------
+def test_fault_spec_parsing_and_consumption():
+    with faults.inject("emit_fail:group=1;tuner_hang:sleep=2,times=2"):
+        assert faults.armed("emit_fail") and faults.armed("tuner_hang")
+        assert not faults.armed("race_crash")
+        # context mismatch does not consume the firing
+        assert faults.fire("emit_fail", group=0) is None
+        assert faults.armed("emit_fail")
+        f = faults.fire("emit_fail", group=1)
+        assert f is not None and f.fired == 1
+        # times=1 exhausted: recovery path runs clean
+        assert faults.fire("emit_fail", group=1) is None
+        # param naming a context key the site didn't pass never fires
+        assert faults.fire("tuner_hang") is not None
+        assert faults.fire("tuner_hang").sleep_s() == 2.0
+        assert faults.fire("tuner_hang") is None      # times=2 exhausted
+    # the with-block restored the outer (empty) plan
+    assert not faults.armed("emit_fail")
+
+
+def test_fault_env_rearm(monkeypatch):
+    monkeypatch.setenv(faults.ENV_FAULTS, "race_crash")
+    faults.reset()
+    assert faults.armed("race_crash")
+    monkeypatch.setenv(faults.ENV_FAULTS, "")
+    assert not faults.armed("race_crash")   # env change re-parses
+    faults.reset()
+
+
+def test_unknown_fault_point_ignored():
+    with faults.inject("not_a_point:x=1;emit_fail"):
+        assert faults.fire("emit_fail") is not None
+
+
+# -- watchdog -----------------------------------------------------------------
+def test_watchdog_passes_result_and_times_out():
+    assert with_watchdog(lambda: 41 + 1, 5.0) == 42
+    with pytest.raises(RaceTimeoutError):
+        with_watchdog(lambda: time.sleep(10), 0.2, label="unit test")
+    # exceptions inside the job propagate as-is
+    with pytest.raises(ZeroDivisionError):
+        with_watchdog(lambda: 1 / 0, 5.0)
+
+
+# -- verification policy + comparator ----------------------------------------
+def test_verify_policy_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    assert not VerifyPolicy.from_env().enabled
+    monkeypatch.setenv("REPRO_VERIFY", "first")
+    monkeypatch.setenv("REPRO_VERIFY_N", "3")
+    p = VerifyPolicy.from_env()
+    assert [p.should_verify(i) for i in range(5)] == \
+        [True, True, True, False, False]
+    monkeypatch.setenv("REPRO_VERIFY", "sample")
+    monkeypatch.setenv("REPRO_VERIFY_SAMPLE", "4")
+    p = VerifyPolicy.from_env()
+    assert [p.should_verify(i) for i in range(9)] == \
+        [True, False, False, False, True, False, False, False, True]
+
+
+def test_outputs_mismatch_tolerances():
+    a = np.linspace(0, 1, 64, dtype=np.float32)
+    assert outputs_mismatch([a], [a + 1e-6]) is None          # within fp32 tol
+    assert outputs_mismatch([a], [a + 1.0]) is not None       # way off
+    bf = jnp.asarray(a, jnp.bfloat16)
+    assert outputs_mismatch([bf], [bf + 1e-3]) is None        # bf16 is loose
+    ints = np.arange(8, dtype=np.int32)
+    assert outputs_mismatch([ints], [ints]) is None
+    assert outputs_mismatch([ints], [ints + 1]) is not None   # ints: exact
+    assert outputs_mismatch([a], [a, a]) is not None          # arity
+    assert outputs_mismatch([a], [a.reshape(8, 8)]) is not None  # shape
+    assert outputs_mismatch([a], [a.astype(np.float64)]) is not None  # dtype
+
+
+# -- poison list --------------------------------------------------------------
+def test_poison_list_persists(tmp_path):
+    p1 = PoisonList(str(tmp_path))
+    assert "sig1" not in p1 and len(p1) == 0
+    p1.pin("sig1", RUNG_BASELINE, "verify mismatch")
+    p2 = PoisonList(str(tmp_path))               # fresh process
+    assert "sig1" in p2
+    assert p2.rung_for("sig1") == RUNG_BASELINE
+    assert p2.reason_for("sig1") == "verify mismatch"
+    # concurrent pins merge instead of clobbering
+    p2.pin("sig2")
+    p1.pin("sig3")
+    p3 = PoisonList(str(tmp_path))
+    assert {"sig1", "sig2", "sig3"} <= {s for s in ("sig1", "sig2", "sig3")
+                                        if s in p3}
+
+
+# -- plan-cache integrity -----------------------------------------------------
+def _store_one(tmp_path, args):
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path))
+    sf(*args)
+    return sf.reports()[0].signature
+
+
+def test_plan_cache_checksum_roundtrip(tmp_path):
+    args = _deep_args()
+    sig = _store_one(tmp_path, args)
+    pc = PlanCache(str(tmp_path))
+    entry = pc.load(sig)
+    assert entry is not None
+    assert entry["checksum"] == entry_checksum(entry)
+    assert pc.quarantined == 0
+
+
+def test_plan_cache_tampered_entry_quarantined_not_crash(tmp_path):
+    args = _deep_args()
+    sig = _store_one(tmp_path, args)
+    path = tmp_path / f"{sig}.json"
+    entry = json.loads(path.read_text())
+    entry["schedules"] = entry.get("schedules", [])[:-1]   # bit rot
+    path.write_text(json.dumps(entry))                     # stale checksum
+    pc = PlanCache(str(tmp_path))
+    assert pc.load(sig) is None            # miss, not an exception
+    assert pc.quarantined == 1
+    assert "checksum" in pc.last_error
+    assert not path.exists()               # moved aside...
+    qdir = tmp_path / "quarantine"
+    assert qdir.exists() and any(qdir.iterdir())
+    # ...and the pipeline recompiles + re-stores cleanly
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path))
+    _assert_close(sf(*args), _deep(*(jnp.asarray(a) for a in args)))
+    assert PlanCache(str(tmp_path)).load(sig) is not None
+
+
+def test_plan_cache_torn_write_quarantined(tmp_path):
+    """cache_corrupt injection truncates the stored payload mid-write;
+    the next load must quarantine it and miss, never crash or serve a
+    half-parsed plan."""
+    args = _deep_args()
+    with faults.inject("cache_corrupt"):
+        sig = _store_one(tmp_path, args)
+    pc = PlanCache(str(tmp_path))
+    assert pc.load(sig) is None
+    assert pc.quarantined == 1
+    # and a clean re-store round-trips again
+    _store_one(tmp_path, args)
+    assert PlanCache(str(tmp_path)).load(sig) is not None
+
+
+def test_plan_cache_legacy_entry_without_checksum(tmp_path):
+    args = _deep_args()
+    sig = _store_one(tmp_path, args)
+    path = tmp_path / f"{sig}.json"
+    entry = json.loads(path.read_text())
+    del entry["checksum"]                  # entry from an older build
+    path.write_text(json.dumps(entry))
+    assert PlanCache(str(tmp_path)).load(sig) is not None
+
+
+def test_plan_cache_absent_entry_is_plain_miss(tmp_path):
+    pc = PlanCache(str(tmp_path))
+    assert pc.load("nope") is None
+    assert pc.quarantined == 0
+
+
+# -- the fallback ladder ------------------------------------------------------
+def test_emit_fail_ladder_full(tmp_path):
+    """ISSUE acceptance: inject emit_fail on one group of a 3-group
+    plan -- the other two stay stitched, the whole function still
+    matches the interpret-dispatch oracle, and the report names the
+    degraded group and reason."""
+    args = _three_args()
+    ref = StitchedFunction(_three, dispatch="interpret")(*args)
+
+    sf0 = StitchedFunction(_three)
+    rep0 = sf0.report(*args)
+    assert rep0.n_groups >= 3            # the setup really has 3 groups
+    assert rep0.rung == RUNG_STITCHED and not rep0.fallbacks
+
+    with faults.inject("emit_fail:group=1"):
+        sf = StitchedFunction(_three)
+        out = sf(*args)
+        rep = sf.reports()[0]
+    _assert_close(out, ref)
+    assert len(rep.fallbacks) == 1
+    gid, rung, reason = rep.fallbacks[0]
+    assert gid == 1
+    assert rung in (RUNG_PATTERNS, RUNG_BASELINE)
+    assert "emit_fail" in reason and "EmitError" in reason
+    assert rep.rung == rung              # coarsest rung reflects the drop
+    # the two healthy groups still emitted stitched pallas kernels
+    assert rep.n_pallas >= 2
+    assert not rep.quarantined
+
+
+def test_degraded_compile_never_persisted(tmp_path):
+    args = _three_args()
+    with faults.inject("emit_fail:group=0"):
+        sf = StitchedFunction(_three, plan_cache=str(tmp_path))
+        sf(*args)
+        rep = sf.reports()[0]
+    assert rep.fallbacks
+    # the degraded plan must not have been stored for later processes
+    assert PlanCache(str(tmp_path)).load(rep.signature) is None
+    # a clean recompile stores normally
+    sf2 = StitchedFunction(_three, plan_cache=str(tmp_path))
+    sf2(*args)
+    assert not sf2.reports()[0].fallbacks
+    assert PlanCache(str(tmp_path)).load(rep.signature) is not None
+
+
+def test_first_exec_failure_falls_back_to_baseline():
+    """A dispatch that raises at execution time (not emission time)
+    quarantines to the baseline rung and still returns the right
+    answer."""
+    args = _deep_args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+    sf = StitchedFunction(_deep)
+    compiled = sf.compiled(*args)
+
+    def boom(*a):
+        raise RuntimeError("injected exec failure")
+
+    compiled._jitted = boom
+    out = sf(*args)
+    _assert_close(out, ref)
+    assert compiled.report.quarantined
+    assert compiled.report.rung == RUNG_BASELINE
+    assert any("exec failure" in r for _, _, r in compiled.report.fallbacks)
+    # later calls keep serving the baseline (no repeated crash)
+    _assert_close(sf(*args), ref)
+
+
+# -- shadow verification + quarantine -----------------------------------------
+def test_shadow_verify_counts(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "first")
+    monkeypatch.setenv("REPRO_VERIFY_N", "2")
+    args = _deep_args()
+    sf = StitchedFunction(_deep)
+    for _ in range(4):
+        sf(*args)
+    rep = sf.reports()[0]
+    assert rep.verified == 2
+    assert rep.verify_failures == 0 and not rep.quarantined
+    assert rep.rung == RUNG_STITCHED
+
+
+def test_numeric_mismatch_quarantines_and_poisons(monkeypatch, tmp_path):
+    """The whole quarantine chain: a (simulated) silently-wrong kernel
+    is caught by shadow verification; the call returns the XLA
+    reference; the plan-cache entry is evicted; the signature is
+    poisoned so it is never re-persisted; a fresh compile of the same
+    function lands pinned on the baseline rung."""
+    monkeypatch.setenv("REPRO_VERIFY", "first")
+    args = _deep_args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path))
+    sf(*args)                                     # clean store
+    sig = sf.reports()[0].signature
+    assert PlanCache(str(tmp_path)).load(sig) is not None
+
+    with faults.inject("numeric_mismatch"):
+        sf2 = StitchedFunction(_deep, plan_cache=str(tmp_path))
+        out = sf2(*args)
+        rep = sf2.reports()[0]
+    _assert_close(out, ref)
+    assert rep.quarantined and rep.verify_failures == 1
+    assert rep.rung == RUNG_BASELINE
+    assert any("mismatch" in r for _, _, r in rep.fallbacks)
+    _assert_close(sf2(*args), ref)                # baseline keeps serving
+
+    pc = PlanCache(str(tmp_path))
+    assert pc.load(sig) is None                   # evicted
+    assert sig in pc.poison                       # pinned
+    assert pc.poison.rung_for(sig) == RUNG_BASELINE
+
+    # fresh compile: pinned to baseline, correct, and nothing re-persisted
+    sf3 = StitchedFunction(_deep, plan_cache=str(tmp_path))
+    out3 = sf3(*args)
+    rep3 = sf3.reports()[0]
+    _assert_close(out3, ref)
+    assert rep3.rung == RUNG_BASELINE
+    assert any("poisoned" in r for _, _, r in rep3.fallbacks)
+    assert PlanCache(str(tmp_path)).load(sig) is None
+
+    # the poisoned signature also refuses direct stores
+    entry = {"signature": sig, "format": 0}
+    PlanCache(str(tmp_path)).store(sig, entry)
+    assert PlanCache(str(tmp_path)).load(sig) is None
+
+
+# -- autotune resilience ------------------------------------------------------
+def _race_case():
+    args = _deep_args()
+    graph = trace(_deep, *args)
+    ctx = CostContext(graph)
+    plan = make_plan(graph, ctx=ctx)
+    res = search_groups(graph, plan, ctx=ctx)
+    return graph, ctx, [c.groups for c in res.candidates]
+
+
+def test_race_crash_branch_disqualified(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+    graph, ctx, cands = _race_case()
+    assert len(cands) >= 2
+    with faults.inject("race_crash:branch=0"):
+        out = tune_partitions(graph, cands, ctx=ctx)
+    assert out is not None                 # the race still commits a winner
+    assert all(np.isfinite(t) for t in out.measured_s)
+
+
+def test_race_crash_end_to_end_still_correct(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+    args = _deep_args()
+    with faults.inject("race_crash:branch=0"):
+        sf = StitchedFunction(_deep, autotune=True)
+        out = sf(*args)
+    _assert_close(out, _deep(*(jnp.asarray(a) for a in args)))
+
+
+def test_tuner_hang_watchdog_aborts_race(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+    monkeypatch.setenv("REPRO_RACE_TIMEOUT_S", "0.5")
+    graph, ctx, cands = _race_case()
+    with faults.inject("tuner_hang:sleep=5"):
+        out = tune_partitions(graph, cands, ctx=ctx)
+    assert out is None                     # aborted, not hung
+    assert ctx.caps.get("race_timeout") == 1   # ...and not silent
+
+
+def test_tuner_hang_end_to_end_serves_analytic_plan(monkeypatch):
+    """A wedged race degrades to the analytic plan: the compile
+    completes, the result is correct, the partition stays
+    model-sourced."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+    monkeypatch.setenv("REPRO_RACE_TIMEOUT_S", "0.5")
+    args = _deep_args()
+    with faults.inject("tuner_hang:sleep=5"):
+        sf = StitchedFunction(_deep, autotune=True)
+        out = sf(*args)
+        rep = sf.reports()[0]
+    _assert_close(out, _deep(*(jnp.asarray(a) for a in args)))
+    assert rep.partition_source == "model"
+    assert rep.caps_hit.get("race_timeout") == 1
+
+
+# -- background tuner containment --------------------------------------------
+def test_background_tuner_retries_flaky_job():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 2:
+            raise RuntimeError("transient")
+        return "measured"
+
+    with BackgroundTuner(retry=RetryPolicy(max_retries=2,
+                                           backoff_s=0.01)) as t:
+        t.submit(flaky)
+        assert t.drain(timeout=10.0)
+    assert t.stats.failed == 0
+    assert t.stats.retries == 1
+    assert t.stats.measured == 1
+
+
+def test_background_tuner_circuit_breaker_skips_poisoned_key():
+    with BackgroundTuner(retry=RetryPolicy(max_retries=0),
+                         breaker_threshold=2) as t:
+        for _ in range(4):
+            t.submit(lambda: 1 / 0, key="sigA")
+        t.submit(lambda: "measured", key="sigB")
+        assert t.drain(timeout=10.0)
+    assert t.stats.failed == 2             # threshold trips after 2
+    assert t.stats.skipped == 2            # the rest never ran
+    assert t.stats.measured == 1           # other keys unaffected
+    assert "ZeroDivisionError" in t.stats.last_error
+
+
+def test_background_tuner_job_watchdog_and_bounded_close():
+    with BackgroundTuner(job_timeout_s=0.3) as t:
+        t.submit(lambda: time.sleep(30))
+        assert t.drain(timeout=10.0)       # watchdog abandons the attempt
+    assert t.stats.failed == 1
+    assert "RaceTimeout" in t.stats.last_error
+
+    t2 = BackgroundTuner()
+    t2.submit(lambda: time.sleep(30))
+    t0 = time.perf_counter()
+    assert t2.close(timeout=0.3) is False  # bounded: never hangs shutdown
+    assert time.perf_counter() - t0 < 2.0
+
+
+# -- circuit breaker / retry policy units -------------------------------------
+def test_circuit_breaker_unit():
+    br = CircuitBreaker(threshold=2)
+    assert not br.record_failure("k")
+    assert br.record_failure("k")          # True exactly when it opens
+    assert br.is_open("k") and br.open_count == 1
+    assert not br.is_open("other")
+    br.record_success("other")
+    assert not br.is_open("other")
+
+
+def test_retry_policy_backoff_bounded():
+    r = RetryPolicy(max_retries=5, backoff_s=0.1, max_backoff_s=0.5)
+    delays = [r.delay(a) for a in range(6)]
+    assert delays[0] == pytest.approx(0.1)
+    assert all(d <= 0.5 for d in delays)
+    assert delays == sorted(delays)
+
+
+# -- train-loop containment ---------------------------------------------------
+def test_run_with_restarts_recovers(tmp_path):
+    from repro.data import DataState
+
+    class Data:
+        def __init__(self):
+            self.state = DataState(0, 0)
+
+        def batch_at(self, step):
+            return {"x": np.full((2,), float(step), np.float32)}
+
+        def restore(self, st):
+            self.state = st
+
+    def step(state, batch):
+        return {"acc": state["acc"] + batch["x"].sum(), "n": state["n"] + 1}
+
+    init = lambda: {"acc": np.float32(0), "n": np.int64(0)}  # noqa: E731
+    ref, _ = RestartableLoop(str(tmp_path / "a"), ckpt_every=5,
+                             async_io=False).run(init(), Data(), step, 17)
+    restarts = []
+    got, _ = RestartableLoop(str(tmp_path / "b"), ckpt_every=5,
+                             async_io=False).run_with_restarts(
+        init(), Data(), step, 17, fail_at=12,
+        on_restart=lambda a, e: restarts.append(a))
+    assert float(got["acc"]) == float(ref["acc"])
+    assert len(restarts) == 1
+
+    def bad(state, batch):
+        raise ValueError("poison batch")
+
+    with pytest.raises(GuardError) as ei:
+        RestartableLoop(str(tmp_path / "c"), ckpt_every=5,
+                        async_io=False).run_with_restarts(
+            init(), Data(), bad, 17, max_restarts=2,
+            retry=RetryPolicy(max_retries=2, backoff_s=0.0))
+    assert isinstance(ei.value.__cause__, ValueError)

@@ -229,6 +229,7 @@ def test_v3_entry_degrades_to_remeasure_and_upgrades(monkeypatch, tmp_path):
     with open(path) as f:
         entry = json.load(f)
     entry["format"] = 3                    # downgrade: strip the v4 marker
+    entry.pop("checksum", None)            # pre-checksum era had none
     entry.pop("partition_source", None)
     with open(path, "w") as f:
         json.dump(entry, f)
