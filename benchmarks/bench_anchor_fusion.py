@@ -1,0 +1,113 @@
+"""Compute-anchored megakernels: anchored vs memory-only stitching.
+
+For each workload we compile the same graph twice -- anchoring enabled
+(default) and forced off via ``REPRO_ANCHOR=0`` (the pure-memory
+partition: compute ops stay graph breaks) -- and report:
+
+  * kernel-launch count for both modes (the anchored plan folds the
+    prologue/epilogue chains into the matmul / attention grid, so it
+    must launch strictly fewer kernels),
+  * modeled inter-pattern HBM bytes eliminated in both modes (the
+    anchored plan additionally elides the anchor's interface tensors,
+    so its saving must be strictly larger),
+  * measured wall-clock per call (CPU interpret-mode Pallas: read
+    ratios as dispatch/traffic structure, not TPU latency), with
+  * numerics checked against the plain-jnp (XLA) reference.
+
+The two workloads are the paper's compute-adjacent shapes: an MLP block
+(scale prologue -> matmul -> residual/activation epilogue) and an
+attention block (QK^T with scale + bias folded into the flash inner
+loop, then the PV contraction).
+
+Both deltas are *asserted*, not just printed -- a regression that stops
+anchoring fails the benchmark leg rather than silently reporting equal
+launch counts.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StitchedFunction
+from .common import csv_row, timeit
+
+rng = np.random.default_rng(23)
+
+
+def _mlp_block(x, w1, w2, r, g):
+    h = (x * g + 1.0) @ w1
+    h = jax.nn.gelu(h, approximate=True) @ w2
+    return jnp.tanh(h) + r
+
+
+def _attn_block(q, k, v, bias):
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * 0.125 + bias
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def _workloads():
+    M, K, N = 128, 256, 256
+    yield ("mlp_block_128x256", _mlp_block,
+           (rng.standard_normal((M, K)).astype(np.float32),
+            rng.standard_normal((K, N)).astype(np.float32),
+            rng.standard_normal((N, K)).astype(np.float32),
+            rng.standard_normal((M, K)).astype(np.float32),
+            rng.standard_normal((K,)).astype(np.float32)))
+    B, H, S, D = 2, 4, 128, 64
+    yield ("attn_block_b2h4s128d64", _attn_block,
+           (rng.standard_normal((B, H, S, D)).astype(np.float32),
+            rng.standard_normal((B, H, S, D)).astype(np.float32),
+            rng.standard_normal((B, H, S, D)).astype(np.float32),
+            rng.standard_normal((1, 1, S, S)).astype(np.float32)))
+
+
+def run() -> list[str]:
+    rows = []
+    saved = os.environ.get("REPRO_ANCHOR")
+    try:
+        for name, fn, args in _workloads():
+            os.environ["REPRO_ANCHOR"] = "1"
+            anchored = StitchedFunction(fn)
+            rep_a = anchored.report(*args)
+            y_a = np.asarray(anchored(*args))
+            t_a = timeit(anchored, *args)
+
+            os.environ["REPRO_ANCHOR"] = "0"
+            memory = StitchedFunction(fn)
+            rep_m = memory.report(*args)
+            t_m = timeit(memory, *args)
+
+            y_ref = np.asarray(fn(*(jnp.asarray(a) for a in args)))
+            max_err = float(np.max(np.abs(y_a - y_ref)))
+
+            launches_a = rep_a.stats.n_kernels_stitched
+            launches_m = rep_m.stats.n_kernels_stitched
+            assert rep_a.n_anchored >= 1, f"{name}: nothing anchored"
+            assert launches_a < launches_m, \
+                f"{name}: anchored plan must launch fewer kernels " \
+                f"({launches_a} vs {launches_m})"
+            assert rep_a.stitched_hbm_bytes_saved \
+                > rep_m.stitched_hbm_bytes_saved, \
+                f"{name}: anchored plan must model more HBM saved"
+            assert max_err < 5e-4, f"{name}: numerics drifted ({max_err})"
+
+            rows.append(csv_row(
+                f"anchor_{name}", t_a * 1e6,
+                f"launches={launches_a} (memory-only {launches_m}); "
+                f"anchored_groups={rep_a.n_anchored}; "
+                f"interpattern_hbm_saved={rep_a.stitched_hbm_bytes_saved}B "
+                f"(memory-only {rep_m.stitched_hbm_bytes_saved}B); "
+                f"hbm_delta="
+                f"{rep_a.stitched_hbm_bytes_saved - rep_m.stitched_hbm_bytes_saved}B; "
+                f"wall={t_a*1e6:.0f}us vs memory-only {t_m*1e6:.0f}us; "
+                f"max|err vs jnp ref|={max_err:.2e}"))
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_ANCHOR", None)
+        else:
+            os.environ["REPRO_ANCHOR"] = saved
+    return rows

@@ -59,16 +59,16 @@ def main() -> None:
                     choices=["fig1", "table2", "fig7", "overhead", "roofline",
                              "plan_time", "stitch_groups", "beam_stitch",
                              "topk_tune", "recompute", "serving",
-                             "guard_overhead"])
+                             "guard_overhead", "anchor"])
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write structured per-row records")
     args = ap.parse_args()
 
-    from . import (bench_beam_stitch, bench_fig1_layernorm,
-                   bench_fig7_speedup, bench_guard_overhead, bench_overhead,
-                   bench_plan_time, bench_recompute, bench_serving,
-                   bench_stitch_groups, bench_table2_breakdown,
-                   bench_topk_tune, roofline)
+    from . import (bench_anchor_fusion, bench_beam_stitch,
+                   bench_fig1_layernorm, bench_fig7_speedup,
+                   bench_guard_overhead, bench_overhead, bench_plan_time,
+                   bench_recompute, bench_serving, bench_stitch_groups,
+                   bench_table2_breakdown, bench_topk_tune, roofline)
 
     suites = {
         "fig1": bench_fig1_layernorm.run,
@@ -83,6 +83,7 @@ def main() -> None:
         "recompute": bench_recompute.run,
         "serving": bench_serving.run,
         "guard_overhead": bench_guard_overhead.run,
+        "anchor": bench_anchor_fusion.run,
     }
     selected = [args.only] if args.only else list(suites)
 

@@ -670,11 +670,15 @@ def _candidate_branches(graph: Graph, ci: int, groups, region, ext_ids,
     whose analytic best left a feasible thread-composition one-pass on
     the table."""
     def emitted_for(grp, over: dict | None):
-        key = (grp.members, override_fp(over))
+        anchors = tuple(getattr(grp, "anchors", ()))
+        key = (grp.members, anchors, override_fp(over))
         if key not in emit_cache:
             em = emit_group(graph, grp.parts, hw=hw, interpret=interpret,
-                            ctx=ctx, schedule_override=over or None)
-            if over and em.estimate.schedule != over.get("schedule"):
+                            ctx=ctx, schedule_override=over or None,
+                            anchors=anchors)
+            if anchors:
+                pass  # anchored emission has one fixed scheme
+            elif over and em.estimate.schedule != over.get("schedule"):
                 em = None  # emitter fell back: not the asked-for schedule
             elif over and sorted(em.estimate.recompute_ids) != sorted(
                     over.get("recompute", ())):
@@ -713,8 +717,8 @@ def _candidate_branches(graph: Graph, ci: int, groups, region, ext_ids,
         return out
     out.append(base)
     for gi, grp in enumerate(groups):
-        if not grp.stitched:
-            continue
+        if getattr(grp, "anchors", ()) or not grp.stitched:
+            continue  # anchored groups race as-is: no schedule family swap
         for swap in (_alt_schedule_override, _recompute_swap_override):
             try:
                 over = swap(graph, grp.members,

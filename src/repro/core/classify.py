@@ -42,10 +42,20 @@ _BROADCAST = {"broadcast_in_dim"}
 _RESHAPE = {"reshape", "squeeze", "expand_dims"}
 _TRANSPOSE = {"transpose"}
 
-# Everything else (dot_general, conv, gather, scatter, cumsum, sort,
-# dynamic_slice, iota, rng, while/scan/cond, argmax, ...) is OPAQUE: a
-# fusion boundary, exactly like the paper treats GEMM/conv and ops its
-# code generator cannot stitch.
+# Compute-intensive MXU ops: never plain pattern members, but not plain
+# graph breaks either -- the stitcher may open a group *around* one and
+# fold adjacent memory-intensive chains into its kernel body (epilogue
+# fusion / folded attention score chains).  Custom fused-attention call
+# prims land here too so a traced model that routes through them is
+# priced as compute, not as the default elementwise bucket.
+_ANCHOR = {
+    "dot_general", "conv_general_dilated",
+    "scaled_dot_product_attention", "flash_attention",
+}
+
+# Everything else (gather, scatter, cumsum, sort, dynamic_slice, rng,
+# while/scan/cond, argmax, ...) is OPAQUE: a hard fusion boundary,
+# exactly like ops the paper's code generator cannot stitch.
 
 
 def classify(prim_name: str) -> OpKind:
@@ -61,6 +71,8 @@ def classify(prim_name: str) -> OpKind:
         return OpKind.RESHAPE
     if prim_name in _TRANSPOSE:
         return OpKind.TRANSPOSE
+    if prim_name in _ANCHOR:
+        return OpKind.ANCHOR
     return OpKind.OPAQUE
 
 
@@ -97,6 +109,13 @@ _VPU_COST: dict[str, float] = {
     "broadcast_in_dim": 0.25,
     "reshape": 0.0, "squeeze": 0.0, "expand_dims": 0.0,
     "transpose": 1.0,
+    # compute anchors: per *output* element cost of the VPU-visible work
+    # (the MXU does the contraction; these keep a union that sees an
+    # anchor from being priced as one light elementwise op per element).
+    "dot_general": 32.0,
+    "conv_general_dilated": 32.0,
+    "scaled_dot_product_attention": 64.0,
+    "flash_attention": 64.0,
 }
 
 

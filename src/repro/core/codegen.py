@@ -93,6 +93,274 @@ def pattern_emittable(graph: Graph, pattern: frozenset[int],
 
 
 # --------------------------------------------------------------------------
+# compute-anchored groups: structural matchers
+# --------------------------------------------------------------------------
+class AnchorEmitError(RuntimeError):
+    """Anchored emission found an unsupported structure at emit time;
+    the dispatch ladder degrades the group to its unanchored parts."""
+
+
+#: Shape-plumbing prims the softmax-tail matcher walks through (they are
+#: elided along with the tail itself -- the flash kernel's online softmax
+#: replaces the whole chain).
+_PASSTHROUGH = {"reshape", "squeeze", "expand_dims", "convert_element_type",
+                "copy", "stop_gradient", "broadcast_in_dim"}
+
+
+def _raw_params(node) -> dict:
+    return node.params.get("_raw_params") or {}
+
+
+def _match_matmul_anchor(graph: Graph, union: frozenset[int],
+                         a: int) -> dict | None:
+    """Match a single-anchor group: prologue -> dot_general -> epilogue.
+
+    Requires an unbatched contraction ``(..., K) @ (K, N)`` with the rhs
+    external to the group, a prologue whose row view is (M, K) and whose
+    every escaping value feeds only the anchor, and an epilogue with row
+    view (M, N) that solely consumes the anchor's result.
+    """
+    node = graph.node(a)
+    if node.prim != "dot_general" or len(node.inputs) < 2:
+        return None
+    dn = _raw_params(node).get("dimension_numbers")
+    if dn is None:
+        return None
+    (cl, cr), (bl, br_) = dn
+    if tuple(bl) or tuple(br_):
+        return None
+    lhs_id, rhs_id = node.inputs[0], node.inputs[1]
+    lhs_spec = graph.node(lhs_id).spec
+    rhs_spec = graph.node(rhs_id).spec
+    if len(rhs_spec.shape) != 2 or rhs_id in union:
+        return None
+    if tuple(cl) != (len(lhs_spec.shape) - 1,) or tuple(cr) != (0,):
+        return None
+    K, N = rhs_spec.shape
+    if not lhs_spec.shape or lhs_spec.shape[-1] != K:
+        return None
+    M = lhs_spec.size // K
+    if node.spec.size != M * N or not node.spec.shape \
+            or node.spec.shape[-1] != N:
+        return None
+
+    mem = union - {a}
+    if not mem or any(graph.node(m).prim not in EMITTABLE_PRIMS
+                      for m in mem):
+        return None
+    _, anc = graph.reachability()
+    pro = frozenset(m for m in mem if (anc[a] >> m) & 1)
+    epi = mem - pro
+    outset = set(graph.outputs)
+
+    pro_info = None
+    if pro:
+        if lhs_id not in pro:
+            return None
+        for m in pro:
+            if m in outset or any(c not in pro and c != a
+                                  for c in graph.consumers(m)):
+                return None
+        pro_info = analyze(graph, pro)
+        if pro_info is None or pro_info.R != M or pro_info.C != K:
+            return None
+    elif lhs_id in union:
+        return None
+
+    epi_info = None
+    if epi:
+        if a in outset or any(c not in epi for c in graph.consumers(a)):
+            return None
+        epi_info = analyze(graph, epi)
+        if epi_info is None or epi_info.R != M or epi_info.C != N:
+            return None
+    return {"kind": "matmul", "a": a, "lhs": lhs_id, "rhs": rhs_id,
+            "M": M, "K": K, "N": N, "pro": pro, "epi": epi,
+            "pro_info": pro_info, "epi_info": epi_info}
+
+
+def _match_softmax_tail(graph: Graph, chain: frozenset[int],
+                        root: int) -> tuple[int, frozenset[int]] | None:
+    """Match ``div(exp(sub(s, max(s))), sum(exp(...)))`` ending at ``root``
+    (walking through shape-plumbing wrappers); returns (s_pre, elided
+    members) where ``s_pre`` is the pre-softmax score value the flash
+    kernel's ``score_mod`` must reproduce.
+    """
+    elided: set[int] = set()
+
+    def back(nid: int) -> int:
+        while nid in chain and graph.node(nid).prim in _PASSTHROUGH:
+            elided.add(nid)
+            nid = graph.node(nid).inputs[0]
+        return nid
+
+    div_id = back(root)
+    if div_id not in chain or graph.node(div_id).prim != "div":
+        return None
+    elided.add(div_id)
+    num_id = back(graph.node(div_id).inputs[0])
+    den_id = back(graph.node(div_id).inputs[1])
+    if den_id not in chain or graph.node(den_id).prim != "reduce_sum":
+        return None
+    elided.add(den_id)
+    if back(graph.node(den_id).inputs[0]) != num_id:
+        return None
+    if num_id not in chain or graph.node(num_id).prim != "exp":
+        return None
+    elided.add(num_id)
+    sub_id = back(graph.node(num_id).inputs[0])
+    if sub_id not in chain or graph.node(sub_id).prim != "sub":
+        return None
+    elided.add(sub_id)
+    s_pre = back(graph.node(sub_id).inputs[0])
+    mx_id = back(graph.node(sub_id).inputs[1])
+    if mx_id in chain and graph.node(mx_id).prim == "max":
+        # jax.nn.softmax clamps the row max against a -inf initial value
+        # (``max(-inf, reduce_max(s))``): semantically the identity, and
+        # the flash kernel's own running max handles the all-masked row,
+        # so the clamp is elided.
+        ins = graph.node(mx_id).inputs
+        guard = [i for i in ins
+                 if graph.node(i).kind is OpKind.CONST
+                 and graph.node(i).spec.size == 1
+                 and graph.node(i).value is not None
+                 and np.isneginf(np.asarray(graph.node(i).value))]
+        rest = [i for i in ins if i not in guard]
+        if len(guard) == 1 and len(rest) == 1:
+            elided.add(mx_id)
+            mx_id = back(rest[0])
+    if mx_id not in chain or graph.node(mx_id).prim != "reduce_max":
+        return None
+    elided.add(mx_id)
+    if back(graph.node(mx_id).inputs[0]) != s_pre:
+        return None
+    for r in (den_id, mx_id):
+        rnode = graph.node(r)
+        op_shape = graph.node(rnode.inputs[0]).spec.shape
+        if tuple(rnode.params.get("axes", ())) != (len(op_shape) - 1,):
+            return None
+    return s_pre, frozenset(elided)
+
+
+def _pad4(shape: tuple[int, ...]) -> tuple[int, int, int, int]:
+    return (1,) * (4 - len(shape)) + tuple(shape)
+
+
+def _score_shape_ok(shape: tuple[int, ...],
+                    extent: tuple[int, int, int, int]) -> bool:
+    if len(shape) > 4:
+        return False
+    return all(d == 1 or d == e for d, e in zip(_pad4(shape), extent))
+
+
+def _match_attention_anchors(graph: Graph, union: frozenset[int],
+                             anchors: tuple[int, ...]) -> dict | None:
+    """Match a two-anchor group: QK dot -> score chain -> softmax -> PV dot.
+
+    q/k/v must be external 4D operands with flash-compatible dimension
+    numbers; the chain between the anchors must end in a softmax tail,
+    and everything upstream of it (scale / bias / mask) must evaluate on
+    (blk_q, blk_k) score tiles -- each value's shape, padded to 4D, has
+    every dim either 1 or the full (B, H, Sq, Skv) extent.
+    """
+    qk, pv = anchors
+    nqk, npv = graph.node(qk), graph.node(pv)
+    if nqk.prim != "dot_general" or npv.prim != "dot_general":
+        return None
+    dn_qk = _raw_params(nqk).get("dimension_numbers")
+    dn_pv = _raw_params(npv).get("dimension_numbers")
+    if dn_qk is None or dn_pv is None:
+        return None
+    if (tuple(map(tuple, dn_qk[0])), tuple(map(tuple, dn_qk[1]))) \
+            != (((3,), (3,)), ((0, 1), (0, 1))):
+        return None
+    if (tuple(map(tuple, dn_pv[0])), tuple(map(tuple, dn_pv[1]))) \
+            != (((3,), (2,)), ((0, 1), (0, 1))):
+        return None
+    q_id, k_id = nqk.inputs[0], nqk.inputs[1]
+    p_id, v_id = npv.inputs[0], npv.inputs[1]
+    if any(x in union for x in (q_id, k_id, v_id)):
+        return None
+    q_spec, k_spec = graph.node(q_id).spec, graph.node(k_id).spec
+    v_spec = graph.node(v_id).spec
+    if len(q_spec.shape) != 4 or len(k_spec.shape) != 4 \
+            or len(v_spec.shape) != 4:
+        return None
+    B, H, Sq, D = q_spec.shape
+    _, _, Sk, _ = k_spec.shape
+    if k_spec.shape != (B, H, Sk, D) or v_spec.shape != (B, H, Sk, D):
+        return None
+    extent = (B, H, Sq, Sk)
+
+    chain = union - {qk, pv}
+    outset = set(graph.outputs)
+    if qk in outset or p_id not in chain:
+        return None
+    for m in chain:
+        if m in outset or any(c not in chain and c != pv
+                              for c in graph.consumers(m)):
+            return None
+    if any(c not in chain for c in graph.consumers(qk)):
+        return None
+
+    tail = _match_softmax_tail(graph, chain, p_id)
+    if tail is None:
+        return None
+    s_pre, elided = tail
+    score = chain - elided
+    if s_pre == qk:
+        if score:
+            return None
+    elif s_pre not in score:
+        return None
+
+    score_ext: list[int] = []
+    _, anc = graph.reachability()
+    for m in sorted(score):
+        node = graph.node(m)
+        if node.prim not in EMITTABLE_PRIMS or node.kind is OpKind.REDUCE:
+            return None
+        if m != s_pre and not ((anc[s_pre] >> m) & 1):
+            return None  # a score member the pre-softmax value never reads
+        if not _score_shape_ok(node.spec.shape, extent):
+            return None
+        if node.prim == "broadcast_in_dim":
+            bd = tuple(node.params.get("broadcast_dimensions", ()))
+            in_nd = len(graph.node(node.inputs[0]).spec.shape)
+            out_nd = len(node.spec.shape)
+            if bd != tuple(range(out_nd - in_nd, out_nd)):
+                return None  # not suffix-aligned: 4D padding would misread it
+        for i in node.inputs:
+            if i in score or i == qk:
+                continue
+            ispec = graph.node(i).spec
+            if not _score_shape_ok(ispec.shape, extent):
+                return None
+            if i not in score_ext:
+                score_ext.append(i)
+    return {"kind": "attention", "qk": qk, "pv": pv,
+            "q": q_id, "k": k_id, "v": v_id,
+            "extent": extent, "D": D, "s_pre": s_pre,
+            "score": score, "score_ext": score_ext}
+
+
+def anchor_emittable(graph: Graph, parts, anchors, ctx=None) -> bool:
+    """Can ``_emit_anchored`` compile this anchored group?  Structural
+    test only (dimension numbers, row views, softmax tail) -- pricing is
+    the stitcher's job."""
+    try:
+        union = frozenset(n for p in parts for n in p)
+        anchors = tuple(sorted(anchors))
+        if len(anchors) == 1:
+            return _match_matmul_anchor(graph, union, anchors[0]) is not None
+        if len(anchors) == 2:
+            return _match_attention_anchors(graph, union, anchors) is not None
+    except Exception:
+        return False
+    return False
+
+
+# --------------------------------------------------------------------------
 # emission
 # --------------------------------------------------------------------------
 def _canon2d(role: Role, C: int) -> tuple[int, ...]:
@@ -341,7 +609,8 @@ def emit_pattern(graph: Graph, pattern: frozenset[int], *,
 def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
                interpret: bool = True, ctx=None,
                schedule_override: dict | None = None,
-               donate_into: "frozenset[int] | None" = None) -> Emitted:
+               donate_into: "frozenset[int] | None" = None,
+               anchors: tuple = ()) -> Emitted:
     """Compile one stitch group into a single Pallas megakernel (paper §4).
 
     ``parts`` are the group's member patterns in topological order.  A
@@ -359,6 +628,9 @@ def emit_group(graph: Graph, parts, *, hw: Hardware = V5E,
     """
     parts = tuple(tuple(sorted(p)) for p in parts)
     union = frozenset(n for p in parts for n in p)
+    if anchors:
+        return _emit_anchored(graph, parts, tuple(sorted(anchors)),
+                              hw=hw, interpret=interpret, ctx=ctx)
     if len(parts) == 1:
         return emit_pattern(graph, union, hw=hw, interpret=interpret,
                             ctx=ctx, schedule_override=schedule_override,
@@ -829,3 +1101,256 @@ def _emit_pallas(graph: Graph, pattern: frozenset[int], info: RowInfo,
         return tuple(outs)
 
     return wrapper
+
+
+# --------------------------------------------------------------------------
+# compute-anchored emission
+# --------------------------------------------------------------------------
+def _eval_rowview(graph: Graph, members, roles, br: int, C: int,
+                  env: dict) -> dict:
+    """Evaluate a row-view subgraph on canonical 2D blocks.
+
+    ``env`` maps external (and already-computed) node ids to their block
+    values; members are evaluated in order and written back into ``env``.
+    The op semantics mirror ``_emit_pallas``'s in-kernel ``compute`` so
+    the prologue/epilogue chains of an anchored kernel behave exactly
+    like the generic one-pass emitter would.
+    """
+    def val(i):
+        if i in env:
+            return env[i]
+        cnode = graph.node(i)  # embedded external const
+        v = jnp.asarray(cnode.value)
+        return (_to_block(v, roles[i], br, C)
+                if cnode.spec.size > 1 else v)
+
+    for nid in members:
+        node = graph.node(nid)
+        if node.kind is OpKind.CONST:
+            env[nid] = _to_block(
+                jnp.asarray(node.value), roles[nid], br, C
+            ) if node.spec.size > 1 else jnp.asarray(node.value)
+            continue
+        role = roles[nid]
+        prim = node.prim
+        if prim in _REDUCES:
+            env[nid] = _REDUCES[prim](val(node.inputs[0]))
+        elif prim == "broadcast_in_dim":
+            env[nid] = _to_block(jnp.broadcast_to(
+                val(node.inputs[0]),
+                (br, C) if role is Role.FULL else
+                (br, 1) if role is Role.ROW else
+                (1, C) if role is Role.COL else ()), role, br, C)
+        elif prim in ("reshape", "squeeze", "expand_dims", "copy",
+                      "stop_gradient"):
+            env[nid] = val(node.inputs[0])
+        elif prim == "convert_element_type":
+            env[nid] = val(node.inputs[0]).astype(node.spec.dtype)
+        elif prim == "integer_pow":
+            env[nid] = val(node.inputs[0]) ** node.params.get("y", 2)
+        else:
+            env[nid] = _OPS[prim](*(val(i) for i in node.inputs))
+    return env
+
+
+def _anchored_estimate(graph: Graph, union: frozenset[int],
+                       hw: Hardware, block_rows: int,
+                       n_steps: int) -> KernelEstimate:
+    hbm = graph.pattern_hbm_bytes(union)
+    flops = sum(2 * graph.node(a).spec.size
+                * graph.node(graph.node(a).inputs[0]).spec.shape[-1]
+                for a in union if graph.node(a).kind is OpKind.ANCHOR)
+    return KernelEstimate(
+        schedule="anchored", block_rows=block_rows,
+        latency_s=hbm / hw.hbm_bw + flops / hw.peak_bf16_flops
+        + hw.launch_s + hw.hbm_latency_s,
+        hbm_bytes=hbm, vpu_ops=0.0, scratch_bytes=0,
+        n_steps=n_steps, feasible=True)
+
+
+def _emit_anchored(graph: Graph, parts, anchors, *, hw: Hardware = V5E,
+                   interpret: bool = True, ctx=None) -> Emitted:
+    """Compile an anchored stitch group into ONE compute kernel whose
+    grid also runs the folded prologue/epilogue chains.  Raises
+    ``AnchorEmitError`` on any structural mismatch -- the dispatch
+    ladder re-emits the group's unanchored composition."""
+    union = frozenset(n for p in parts for n in p)
+    anchor_set = set(anchors)
+    if ctx is not None:
+        b = ctx.bounds(union)
+        ext_all, out_ids = list(b.inputs), list(b.outputs)
+    else:
+        ext_all = graph.pattern_inputs(union)
+        out_ids = graph.pattern_outputs(union)
+    ext_ids = [i for i in ext_all if graph.node(i).kind is not OpKind.CONST]
+    from .cost_model import anchor_interface_bytes
+    folded = tuple(frozenset(p) for p in parts
+                   if not (len(p) == 1 and p[0] in anchor_set))
+    hbm_saved = anchor_interface_bytes(graph, anchors, folded)
+
+    if len(anchors) == 1:
+        m = _match_matmul_anchor(graph, union, anchors[0])
+        if m is None:
+            raise AnchorEmitError("anchored matmul: structure mismatch")
+        return _emit_anchored_matmul(graph, parts, m, ext_ids, out_ids,
+                                     hbm_saved, hw=hw, interpret=interpret)
+    if len(anchors) == 2:
+        m = _match_attention_anchors(graph, union, anchors)
+        if m is None:
+            raise AnchorEmitError("anchored attention: structure mismatch")
+        if list(out_ids) != [m["pv"]]:
+            raise AnchorEmitError("anchored attention: escaping chain value")
+        return _emit_anchored_attention(graph, parts, m, ext_ids,
+                                        hbm_saved, hw=hw,
+                                        interpret=interpret)
+    raise AnchorEmitError(f"unsupported anchor count {len(anchors)}")
+
+
+def _emit_anchored_matmul(graph: Graph, parts, m: dict, ext_ids, out_ids,
+                          hbm_saved: int, *, hw: Hardware,
+                          interpret: bool) -> Emitted:
+    from ..kernels.matmul import DEFAULT_BLOCK_M, matmul_fused
+
+    a, lhs_id, rhs_id = m["a"], m["lhs"], m["rhs"]
+    M, K, N = m["M"], m["K"], m["N"]
+    pro, epi = m["pro"], m["epi"]
+    pro_info, epi_info = m["pro_info"], m["epi_info"]
+    bm = max(1, min(DEFAULT_BLOCK_M, M))
+    anchor_dtype = graph.node(a).spec.dtype
+
+    if pro:
+        pro_ext = [i for i in graph.pattern_inputs(pro)
+                   if graph.node(i).kind is not OpKind.CONST]
+        pro_roles = [pro_info.roles[i].value for i in pro_ext]
+        pro_order = sorted(pro)
+
+        def prologue(*blocks):
+            env = dict(zip(pro_ext, blocks))
+            _eval_rowview(graph, pro_order, pro_info.roles, bm, K, env)
+            return env[lhs_id]
+    else:
+        pro_ext = [lhs_id]
+        pro_roles = ["full"]
+        prologue = None
+
+    if epi:
+        epi_ext = [i for i in graph.pattern_inputs(epi)
+                   if i != a and graph.node(i).kind is not OpKind.CONST]
+        epi_roles = [epi_info.roles[i].value for i in epi_ext]
+        out_roles = [epi_info.roles[o].value for o in out_ids]
+        epi_order = sorted(epi)
+
+        def epilogue(acc, *blocks):
+            env = dict(zip(epi_ext, blocks))
+            env[a] = acc
+            _eval_rowview(graph, epi_order, epi_info.roles, bm, N, env)
+            return tuple(env[o] for o in out_ids)
+    else:
+        epi_ext = []
+        epi_roles = []
+        out_roles = ["full"]
+        epilogue = None
+
+    out_dtypes = [graph.node(o).spec.dtype for o in out_ids]
+    out_shapes = {o: graph.node(o).spec.shape for o in out_ids}
+
+    def fn(*ext_vals):
+        env = dict(zip(ext_ids, ext_vals))
+
+        def get(i):
+            return env[i] if i in env else graph.node(i).value
+
+        outs = matmul_fused(
+            [get(i) for i in pro_ext], get(rhs_id),
+            [get(i) for i in epi_ext],
+            M=M, K=K, N=N, pro_roles=pro_roles, epi_roles=epi_roles,
+            out_roles=out_roles, out_dtypes=out_dtypes,
+            anchor_dtype=anchor_dtype, prologue=prologue,
+            epilogue=epilogue, block_m=bm, interpret=interpret)
+        return tuple(o.reshape(out_shapes[oid])
+                     for o, oid in zip(outs, out_ids))
+
+    union = frozenset(n for p in parts for n in p)
+    est = _anchored_estimate(graph, union, hw, bm, math.ceil(M / bm))
+    vmem = bm * K * graph.node(lhs_id).spec.itemsize \
+        + K * N * graph.node(rhs_id).spec.itemsize + bm * N * 4
+    return Emitted(fn, "pallas", est, ext_ids, list(out_ids),
+                   vmem, vmem, parts=parts, hbm_saved=hbm_saved)
+
+
+def _emit_anchored_attention(graph: Graph, parts, m: dict, ext_ids,
+                             hbm_saved: int, *, hw: Hardware,
+                             interpret: bool) -> Emitted:
+    from ..kernels.flash_attention import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, \
+        flash_attention
+
+    qk, pv = m["qk"], m["pv"]
+    q_id, k_id, v_id = m["q"], m["k"], m["v"]
+    B, H, Sq, Sk = m["extent"]
+    D = m["D"]
+    s_pre, score, score_ext = m["s_pre"], m["score"], m["score_ext"]
+    extent = m["extent"]
+    score_order = sorted(score)
+    out_spec = graph.node(pv).spec
+    score_shapes = [_pad4(graph.node(i).spec.shape) for i in score_ext]
+
+    def _blk_shape(nid, bq, bk):
+        d = _pad4(graph.node(nid).spec.shape)
+        return (bq if d[2] == Sq and Sq != 1 else 1,
+                bk if d[3] == Sk and Sk != 1 else 1)
+
+    def score_mod(s, *blocks):
+        if not score:
+            return s
+        bq, bk = s.shape
+        env = {qk: s}
+        env.update(zip(score_ext, blocks))
+        for nid in score_order:
+            node = graph.node(nid)
+            prim = node.prim
+
+            def val(i):
+                if i in env:
+                    return env[i]
+                v = jnp.asarray(graph.node(i).value)  # scalar const
+                return v.reshape(()) if v.size == 1 \
+                    else v.reshape(_blk_shape(i, bq, bk))
+
+            if node.kind is OpKind.CONST:
+                env[nid] = val(nid)
+            elif prim == "broadcast_in_dim":
+                env[nid] = jnp.broadcast_to(val(node.inputs[0]),
+                                            _blk_shape(nid, bq, bk))
+            elif prim in ("reshape", "squeeze", "expand_dims", "copy",
+                          "stop_gradient"):
+                env[nid] = val(node.inputs[0])
+            elif prim == "convert_element_type":
+                env[nid] = val(node.inputs[0]).astype(node.spec.dtype)
+            elif prim == "integer_pow":
+                env[nid] = val(node.inputs[0]) ** node.params.get("y", 2)
+            else:
+                env[nid] = _OPS[prim](*(val(i) for i in node.inputs))
+        return env[s_pre]
+
+    def fn(*ext_vals):
+        env = dict(zip(ext_ids, ext_vals))
+
+        def get(i):
+            return env[i] if i in env else graph.node(i).value
+
+        sargs = [jnp.asarray(get(i)).reshape(sh)
+                 for i, sh in zip(score_ext, score_shapes)]
+        out = flash_attention(
+            get(q_id), get(k_id), get(v_id), causal=False, scale=1.0,
+            score_mod=score_mod if score else None,
+            score_args=sargs, interpret=interpret)
+        return (out.astype(out_spec.dtype).reshape(out_spec.shape),)
+
+    union = frozenset(n for p in parts for n in p)
+    bq = max(1, min(DEFAULT_BLOCK_Q, Sq))
+    bk = max(1, min(DEFAULT_BLOCK_K, Sk))
+    n_steps = B * H * math.ceil(Sq / bq) * math.ceil(Sk / bk)
+    est = _anchored_estimate(graph, union, hw, bq, n_steps)
+    vmem = bq * D * 4 + bk * D * 8 + bq * bk * 4 + bq * (D + 2) * 4
+    return Emitted(fn, "pallas", est, ext_ids, [pv],
+                   vmem, vmem, parts=parts, hbm_saved=hbm_saved)

@@ -526,6 +526,119 @@ def partition_gain(graph: Graph, partition, hw: Hardware = V5E,
 
 
 # ---------------------------------------------------------------------------
+# compute-anchored stitching (fusion across the memory/compute divide)
+# ---------------------------------------------------------------------------
+#: Env switch: set ``REPRO_ANCHOR=0`` to disable compute-anchored groups
+#: (anchors stay hard graph breaks; plans and plan-cache entries are
+#: byte-for-byte the pre-anchor behavior).  Deliberately NOT hashed into
+#: ``graph_signature`` (same contract as ``REPRO_RECOMPUTE``): anchored
+#: cache entries re-validate at load time and degrade to re-planning
+#: when the knob is off instead of being orphaned.
+ENV_ANCHOR = "REPRO_ANCHOR"
+
+
+def anchor_enabled() -> bool:
+    return os.environ.get(ENV_ANCHOR, "1").lower() \
+        not in ("0", "off", "false")
+
+
+@dataclass(frozen=True)
+class AnchorGain:
+    """What folding memory-intensive parts into a compute kernel buys.
+
+    ``hbm_bytes_saved`` is the interface traffic eliminated: every value
+    that crosses between a folded part and the anchor (or between two
+    folded parts) stops round-tripping HBM -- one store plus one load
+    each.  ``latency_gain_s`` adds the launches saved by collapsing the
+    parts and the anchor's own dispatch into one ``pallas_call``.
+    ``vmem_bytes`` is the rough per-step working set of the anchored
+    kernel's grid (accumulator tile + resident operand panels); a group
+    whose working set blows the VMEM budget is infeasible and must stay
+    on the memory-only plan.
+    """
+
+    latency_gain_s: float
+    hbm_bytes_saved: int
+    vmem_bytes: int
+    feasible: bool
+
+
+def anchor_interface_bytes(graph: Graph, anchors, parts) -> int:
+    """HBM bytes eliminated on the anchor/part interfaces.
+
+    A value saves its round-trip (2x nbytes: the producer kernel's store
+    and the consumer kernel's load) when it is produced inside the union,
+    all its consumers are inside the union, it is not a graph output, and
+    at least one consumer lives in a *different* sub-part than the
+    producer (values internal to one part were already saved by the
+    memory-only stitch and must not be double-counted).
+    """
+    part_of: dict[int, int] = {}
+    for pi, p in enumerate(parts):
+        for nid in p:
+            part_of[nid] = pi
+    for ai, a in enumerate(anchors):
+        part_of[a] = -1 - ai
+    outset = set(graph.outputs)
+    saved = 0
+    for nid, home in part_of.items():
+        if nid in outset:
+            continue
+        cons = graph.consumers(nid)
+        if not cons or any(c not in part_of for c in cons):
+            continue
+        if any(part_of[c] != home for c in cons):
+            saved += 2 * graph.node(nid).nbytes
+    return saved
+
+
+def _anchor_vmem(graph: Graph, anchors, hw: Hardware) -> int:
+    """Per-grid-step working set of the anchored kernel (rough)."""
+    total = 0
+    for a in anchors:
+        node = graph.node(a)
+        if node.prim != "dot_general" or len(node.inputs) < 2:
+            # attention-call prims / conv: assume flash-style 128-blocks
+            total += 4 * 128 * 128 * 4
+            continue
+        lhs = graph.node(node.inputs[0]).spec
+        rhs = graph.node(node.inputs[1]).spec
+        K = lhs.shape[-1] if lhs.shape else 1
+        N = rhs.shape[-1] if rhs.shape else 1
+        bm = 128
+        if len(anchors) > 1:
+            # attention pair (QK + PV): flash blocks, panels never whole
+            total += bm * (K + N) * 4 + bm * bm * 4
+        else:
+            # matmul: lhs tile (bm, K) + resident rhs panel (K, N)
+            # + f32 accumulator tile (bm, N)
+            total += bm * K * lhs.itemsize + K * N * rhs.itemsize \
+                + bm * N * 4
+    return total
+
+
+def anchor_gain(graph: Graph, anchors, parts, hw: Hardware = V5E,
+                ctx=None) -> AnchorGain:
+    """Price folding ``parts`` into the compute kernel(s) ``anchors``.
+
+    Unlike ``stitch_gain`` this does not re-price the union schedule --
+    the anchored kernel keeps the compute op's own grid and the folded
+    chains ride along tile-by-tile, so the gain is pure interface
+    traffic plus launch collapse, gated by a VMEM working-set check.
+    """
+    saved = anchor_interface_bytes(graph, anchors, parts)
+    launches_saved = max(0, len(parts) + len(anchors) - 1) \
+        * (hw.launch_s + hw.hbm_latency_s)
+    vmem = _anchor_vmem(graph, anchors, hw)
+    return AnchorGain(
+        latency_gain_s=saved / hw.hbm_bw + launches_saved,
+        hbm_bytes_saved=saved,
+        vmem_bytes=vmem,
+        feasible=vmem <= hw.vmem_budget,
+    )
+
+
+# ---------------------------------------------------------------------------
 # delta-evaluator
 # ---------------------------------------------------------------------------
 def delta_evaluator(graph: Graph, pattern: frozenset[int],

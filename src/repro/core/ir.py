@@ -30,7 +30,11 @@ class OpKind(enum.Enum):
     BROADCAST = "broadcast"      # broadcast_in_dim
     RESHAPE = "reshape"          # shape-only: reshape / squeeze / expand_dims
     TRANSPOSE = "transpose"      # layout permutation (memory-intensive per paper §1)
-    OPAQUE = "opaque"            # GEMM / conv / gather / scan / ... : fusion boundary
+    ANCHOR = "anchor"            # compute-intensive op (GEMM / conv / attention)
+    #                              a stitch group may open *around* it and fold
+    #                              adjacent memory-intensive chains into its
+    #                              kernel body (never a plain pattern member)
+    OPAQUE = "opaque"            # gather / scan / ... : hard fusion boundary
 
 
 #: Kinds that may be members of a fusion pattern.
@@ -340,9 +344,21 @@ class StitchGroup:
     back-to-back inside one Pallas grid cell, staging inter-part values
     in VMEM instead of round-tripping HBM (paper §4's composition of
     operators with varied data dependencies into one large kernel).
+
+    ``anchors`` names compute-intensive (``OpKind.ANCHOR``) nodes the
+    group is built *around*: each appears in ``parts`` as its own
+    singleton part, and the emitter threads the surrounding parts into
+    the anchor's compute kernel as prologue/epilogue lambdas (matmul
+    with fused epilogue, flash attention with a folded score chain)
+    instead of staging across separate launches.  ``unanchored`` keeps
+    the pre-fold composition (a tuple of part-tuples, one per original
+    group plus one per bare anchor) so emission failure can fall back
+    one rung to the unanchored stitched schedule.
     """
 
     parts: tuple[frozenset[int], ...]
+    anchors: tuple[int, ...] = ()
+    unanchored: tuple = ()
 
     @functools.cached_property
     def members(self) -> frozenset[int]:
@@ -357,6 +373,10 @@ class StitchGroup:
     @property
     def stitched(self) -> bool:
         return len(self.parts) > 1
+
+    @property
+    def anchored(self) -> bool:
+        return bool(self.anchors)
 
 
 @dataclass

@@ -48,7 +48,8 @@ import time
 from repro.runtime.guard import CacheCorruptError, PoisonList
 from repro.testing import faults as _faults
 
-from .ir import FUSIBLE_KINDS, FusionPlan, Graph, Pattern, StitchGroup
+from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, Pattern, \
+    StitchGroup
 
 
 def entry_checksum(entry: dict) -> str:
@@ -98,10 +99,26 @@ DEFAULT_EVICT_GRACE_S = 30.0
 #: pins, so a onepass pin that is only feasible under recompute fails
 #: its override re-price at emission and degrades to re-deciding via
 #: the latency sweep; the entry is upgraded to v5 in place.
-FORMAT_VERSION = 5
+#: v6: compute-anchored groups (``anchors`` node-id list on group
+#: records) from anchored stitching.  v5 entries still load in full --
+#: their composition simply predates anchor absorption, so the loader
+#: re-plans the anchors (absorption is deterministic) and backfills the
+#: upgraded entry.  A plan with *no* anchored group is still written as
+#: v5, so ``REPRO_ANCHOR=0`` runs reproduce pre-anchor entries
+#: byte-for-byte; v6 entries loaded with the knob off degrade to
+#: re-stitching instead of silently re-enabling the scheme.
+FORMAT_VERSION = 6
 
 #: Formats ``entry_to_plan`` / ``entry_to_groups`` still understand.
-SUPPORTED_FORMATS = (2, 3, 4, FORMAT_VERSION)
+SUPPORTED_FORMATS = (2, 3, 4, 5, FORMAT_VERSION)
+
+
+def entry_format_for(groups) -> int:
+    """The format ``plan_to_entry`` stamps for this group composition:
+    v6 only when an anchored group forces it (see the v6 note above)."""
+    if groups and any(getattr(g, "anchors", ()) for g in groups):
+        return FORMAT_VERSION
+    return 5
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +154,11 @@ def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
         params = tuple(sorted(
             (k, repr(v)) for k, v in n.params.items()
             if not k.startswith("_")))  # skip live jax primitive handles
-        w(nid, n.prim, n.kind.value, n.inputs, n.spec.shape, n.spec.dtype,
+        # anchors hash as "opaque": classification promoted compute prims
+        # from OPAQUE to ANCHOR, and the signature must stay stable so
+        # pre-anchor entries are found and upgraded instead of orphaned.
+        kind = "opaque" if n.kind is OpKind.ANCHOR else n.kind.value
+        w(nid, n.prim, kind, n.inputs, n.spec.shape, n.spec.dtype,
           params)
     return h.hexdigest()
 
@@ -161,7 +182,7 @@ def plan_to_entry(plan: FusionPlan, schedules: list[dict],
     trusts a measured partition and re-races a modeled one.
     """
     entry = {
-        "format": FORMAT_VERSION,
+        "format": entry_format_for(groups),
         "signature": signature,
         "patterns": [
             {"members": sorted(pat.members), **sched}
@@ -174,14 +195,20 @@ def plan_to_entry(plan: FusionPlan, schedules: list[dict],
         index_of = {pat.members: i for i, pat in enumerate(plan.patterns)}
         recs = []
         for gi, grp in enumerate(groups):
+            anchors = sorted(getattr(grp, "anchors", ()))
+            aset = set(anchors)
             idxs, extra = [], []
             for part in grp.parts:
+                if len(part) == 1 and next(iter(part)) in aset:
+                    continue  # anchor singletons live in "anchors"
                 i = index_of.get(part)
                 if i is not None:
                     idxs.append(i)
                 else:  # absorbed leftover singleton(s)
                     extra.extend(sorted(part))
             rec: dict = {"parts": idxs, "extra": extra}
+            if anchors:
+                rec["anchors"] = anchors
             if group_schedules is not None and gi < len(group_schedules):
                 rec.update(group_schedules[gi])
             recs.append(rec)
@@ -255,6 +282,7 @@ def entry_to_groups(entry: dict, plan: FusionPlan, graph: Graph
         try:
             idxs = [int(i) for i in rec.get("parts", ())]
             extra = [int(e) for e in rec.get("extra", ())]
+            anchors = sorted(int(a) for a in rec.get("anchors", ()))
         except (TypeError, ValueError):
             return None
         if not idxs:
@@ -270,15 +298,38 @@ def entry_to_groups(entry: dict, plan: FusionPlan, graph: Graph
             if node is None or node.kind not in FUSIBLE_KINDS:
                 return None
             used_extra.add(e)
+        for a in anchors:
+            if a in used_extra or a in in_pattern:
+                return None
+            node = graph.nodes.get(a)
+            if node is None or node.kind is not OpKind.ANCHOR:
+                return None
+            used_extra.add(a)
+        if anchors:
+            from .cost_model import anchor_enabled
+
+            # with the knob off an anchored composition degrades to
+            # re-stitching (absorption simply won't re-form the group),
+            # never to silently re-enabling the scheme.
+            if not anchor_enabled():
+                return None
         parts = sorted(
             [plan.patterns[i].members for i in idxs]
-            + [frozenset({e}) for e in extra], key=min)
+            + [frozenset({e}) for e in extra]
+            + [frozenset({a}) for a in anchors], key=min)
         union: frozenset[int] = frozenset()
         for p in parts:
             union |= p
         if not graph.is_convex(union):
             return None
-        groups.append(StitchGroup(tuple(parts)))
+        if anchors:
+            # the original pre-absorption composition is not persisted;
+            # a degenerate per-part fallback keeps the guard ladder sound.
+            groups.append(StitchGroup(
+                tuple(parts), anchors=tuple(anchors),
+                unanchored=tuple((p,) for p in parts)))
+        else:
+            groups.append(StitchGroup(tuple(parts)))
         if format_v == 2:  # pre-group-tuning schedules: degrade to re-tune
             overrides.append({})
             continue
@@ -322,6 +373,16 @@ def override_fp(over: dict | None) -> tuple:
 def _sanitize_override(rec: dict) -> dict:
     """Keep only well-typed schedule fields; a malformed override must
     degrade to the analytic sweep, not crash emission."""
+    if rec.get("schedule") == "anchored":
+        from .cost_model import anchor_enabled
+
+        if not anchor_enabled():
+            return {}
+        over = {"schedule": "anchored"}
+        v = rec.get("block_rows")
+        if isinstance(v, int) and not isinstance(v, bool) and v > 0:
+            over["block_rows"] = v
+        return over
     if rec.get("schedule") not in ("onepass", "streaming", "packed"):
         return {}
     over = {"schedule": rec["schedule"]}

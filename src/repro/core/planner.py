@@ -335,6 +335,13 @@ def plan_stats(graph: Graph, plan: FusionPlan,
     leftovers = [n for n in fusible if n not in covered]
     opaque = [n for n in graph.nodes if graph.node(n).kind is OpKind.OPAQUE
               and graph.node(n).prim != "tuple_get"]
+    # compute anchors launch standalone like opaque ops *unless* an
+    # anchored group folded them into its own kernel (they are then
+    # covered and already counted by that group's unit).  The unfused
+    # baseline always counts them: it predates anchoring by definition.
+    anchors_all = [n for n in graph.nodes
+                   if graph.node(n).kind is OpKind.ANCHOR]
+    free_anchors = [n for n in anchors_all if n not in covered]
 
     units = ([g.members for g in groups] if groups is not None
              else [p.members for p in plan.patterns])
@@ -347,18 +354,19 @@ def plan_stats(graph: Graph, plan: FusionPlan,
             hbm_st += ctx.best(members).hbm_bytes
         else:
             hbm_st += best_estimate(graph, members).hbm_bytes
-    for nid in leftovers + opaque:
+    for nid in leftovers + opaque + free_anchors:
         hbm_st += graph.unfused_hbm_bytes(frozenset({nid}))
 
     hbm_un = sum(graph.unfused_hbm_bytes(frozenset({n}))
-                 for n in fusible + opaque)
+                 for n in fusible + opaque + anchors_all)
 
     return PlanStats(
         n_nodes=len(graph),
         n_fusible=len(fusible),
         n_patterns=len(plan.patterns),
-        n_kernels_stitched=len(units) + len(leftovers) + len(opaque),
-        n_kernels_unfused=len(fusible) + len(opaque),
+        n_kernels_stitched=(len(units) + len(leftovers) + len(opaque)
+                            + len(free_anchors)),
+        n_kernels_unfused=len(fusible) + len(opaque) + len(anchors_all),
         hbm_bytes_stitched=hbm_st,
         hbm_bytes_unfused=hbm_un,
         caps_hit=dict(getattr(ctx, "caps", {}) or {}),

@@ -49,19 +49,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.guard import EmitError, GuardError, PoisonList, \
-    RUNG_BASELINE, RUNG_PATTERNS, RUNG_STITCHED, RUNGS, VerifyPolicy, \
-    outputs_mismatch
+    RUNG_ANCHORED, RUNG_BASELINE, RUNG_PATTERNS, RUNG_STITCHED, RUNGS, \
+    VerifyPolicy, outputs_mismatch
 from repro.testing import faults as _faults
 
 from .codegen import Emitted, emit_group, emit_pattern
 from .costctx import CostContext
-from .cost_model import Hardware, KernelEstimate, V5E
+from .cost_model import Hardware, KernelEstimate, V5E, anchor_enabled
 from .ir import FUSIBLE_KINDS, FusionPlan, Graph, OpKind, StitchGroup
-from .plan_cache import FORMAT_VERSION, PlanCache, entry_partition_source, \
-    entry_to_groups, entry_to_plan, graph_signature, override_fp, \
-    plan_to_entry
+from .plan_cache import PlanCache, entry_format_for, \
+    entry_partition_source, entry_to_groups, entry_to_plan, \
+    graph_signature, override_fp, plan_to_entry
 from .planner import PlanStats, make_plan, plan_stats
-from .stitcher import search_groups
+from .stitcher import absorb_anchors, search_groups
 from .tracer import bind_node, trace
 
 
@@ -83,6 +83,7 @@ class StitchReport:
     groups: list = field(default_factory=list)  # per group: tuple of parts
     n_groups: int = 0                # macro-kernels emitted from patterns
     n_stitched: int = 0              # groups fusing >1 part
+    n_anchored: int = 0              # groups folded into a compute anchor
     stitched_hbm_bytes_saved: int = 0  # inter-pattern HBM traffic removed
     emission_reused: int = 0         # isomorphic groups rebound, not re-emitted
     # -- beam-search partition + measured group tuning -----------------------
@@ -272,7 +273,8 @@ class _Compiled:
             return jax.tree_util.tree_unflatten(self.out_tree, list(ref))
         if ref is not None:
             self.report.verified += 1
-            reason = outputs_mismatch(ref, flat_out)
+            reason = outputs_mismatch(
+                ref, flat_out, anchored=self.report.n_anchored > 0)
             if _faults.fire("numeric_mismatch") is not None:
                 reason = reason or "injected numeric_mismatch"
             if reason is not None:
@@ -373,10 +375,12 @@ def _hash_const(h, nid: int, value) -> None:
 
 
 def _emit_signature(graph: Graph, ctx: CostContext, union: frozenset[int],
-                    override: dict | None) -> tuple:
+                    override: dict | None, anchors: tuple = ()) -> tuple:
     """Dedup key for emission: structural isomorphism + everything the
     emitted closure bakes in beyond the struct key (primitive params,
-    constant *values* -- member and external -- and the schedule pin)."""
+    constant *values* -- member and external -- the schedule pin and the
+    anchors, positionally within the sorted members so isomorphic
+    anchored layers still dedup)."""
     h = hashlib.sha1()
     params_fp = []
     for nid in sorted(union):
@@ -395,8 +399,10 @@ def _emit_signature(graph: Graph, ctx: CostContext, union: frozenset[int],
             cn = graph.node(i)
             if cn.kind is OpKind.CONST and cn.value is not None:
                 _hash_const(h, i, cn.value)
+    smem = sorted(union)
+    apos = tuple(smem.index(a) for a in anchors)
     return (ctx.struct_key(union), tuple(params_fp), h.hexdigest(),
-            override_fp(override))
+            override_fp(override), apos)
 
 
 def _rebind_emitted(graph: Graph, ctx: CostContext, union: frozenset[int],
@@ -654,6 +660,19 @@ class StitchedFunction:
                 groups, group_overrides = loaded
                 groups_from_cache = True
                 partition_source = cached_source
+                # a pre-anchor (v5) composition re-plans its anchors on
+                # load: absorption is deterministic given the graph, so
+                # the backfill below rewrites the upgraded entry in v6.
+                if anchor_enabled() and not any(g.anchors for g in groups):
+                    a_groups, n_anch = absorb_anchors(
+                        graph, [list(g.parts) for g in groups], ctx)
+                    if n_anch:
+                        over_by = {g.parts: o for g, o in
+                                   zip(groups, group_overrides)}
+                        groups = a_groups
+                        group_overrides = [
+                            dict(over_by.get(g.parts, {}))
+                            for g in groups]
             else:
                 # pre-v4 / model-sourced entries degrade to re-measuring
                 # the *partition*, but their group schedule pins (PR 3
@@ -761,8 +780,11 @@ class StitchedFunction:
                 # identical kernels up to constant values).
                 group_tuned_by_struct: dict[tuple, tuple] = {}
                 for gi, grp in enumerate(groups):
-                    if not grp.stitched:
-                        continue  # single patterns: tune_pattern's job
+                    if grp.anchors or not grp.stitched:
+                        # anchored groups carry their own fixed scheme
+                        # (the anchor kernel's grid); single patterns
+                        # are tune_pattern's job.
+                        continue
                     gover = group_overrides[gi]
                     analytic = _sched_of(ctx.best(grp.members))
                     if gover.get("tuned"):
@@ -844,14 +866,32 @@ class StitchedFunction:
 
         def _emit_fallback(gi: int, grp, exc: BaseException) -> list[Emitted]:
             reason = f"{type(exc).__name__}: {exc}"
-            if len(grp.parts) > 1:
+            anchor_set = set(grp.anchors)
+            if anchor_set:
+                # anchored -> unanchored stitched: re-emit the exact
+                # pre-absorption composition (``grp.unanchored``); the
+                # bare anchor nodes fall out of every emitted union and
+                # replay as plain XLA schedule entries.
+                try:
+                    ems = [emit_group(graph, tuple(sub), hw=self._hw,
+                                      interpret=self._interpret, ctx=ctx)
+                           for sub in grp.unanchored
+                           if frozenset(x for p in sub for x in p)
+                           - anchor_set]
+                    fallbacks.append((gi, RUNG_STITCHED, reason))
+                    return ems
+                except Exception:  # noqa: BLE001 - descend one more rung
+                    pass
+            parts = [p for p in grp.parts
+                     if not (len(p) == 1 and next(iter(p)) in anchor_set)]
+            if parts and (anchor_set or len(parts) > 1):
                 try:
                     ems = [emit_group(graph, (part,), hw=self._hw,
                                       interpret=self._interpret, ctx=ctx,
                                       schedule_override=(
                                           dict(pat_over.get(frozenset(part),
                                                             {})) or None))
-                           for part in grp.parts]
+                           for part in parts]
                     fallbacks.append((gi, RUNG_PATTERNS, reason))
                     return ems
                 except Exception:  # noqa: BLE001 - descend one more rung
@@ -880,7 +920,8 @@ class StitchedFunction:
                              if len(grp.parts) == 1 else {})
             parts = tuple(tuple(sorted(p)) for p in grp.parts)
             donate_into = donate_first if gi == first_idx else None
-            ekey = _emit_signature(graph, ctx, union, over) + (
+            ekey = _emit_signature(graph, ctx, union, over,
+                                   anchors=grp.anchors) + (
                 ("donate", tuple(sorted(donate_first)))
                 if donate_into else ())
             em = None
@@ -894,10 +935,16 @@ class StitchedFunction:
                     flt = _faults.fire("emit_fail", group=gi)
                     if flt is not None:
                         raise EmitError(f"injected emit_fail on group {gi}")
+                    if grp.anchors:
+                        flt = _faults.fire("anchor_emit_fail", group=gi)
+                        if flt is not None:
+                            raise EmitError(
+                                f"injected anchor_emit_fail on group {gi}")
                     em = emit_group(graph, grp.parts, hw=self._hw,
                                     interpret=self._interpret, ctx=ctx,
                                     schedule_override=over or None,
-                                    donate_into=donate_into)
+                                    donate_into=donate_into,
+                                    anchors=grp.anchors)
                 except Exception as exc:  # noqa: BLE001 - ladder below
                     for fem in _emit_fallback(gi, grp, exc):
                         fem._members = sorted(  # type: ignore[attr-defined]
@@ -910,7 +957,8 @@ class StitchedFunction:
             em._members = sorted(union)  # type: ignore[attr-defined]
             emitted.append(em)
         schedule = _build_schedule(graph, emitted)
-        rung = RUNG_STITCHED
+        rung = (RUNG_ANCHORED if any(g.anchors for g in groups)
+                else RUNG_STITCHED)
         for _gi, r, _r in fallbacks:
             if RUNGS.index(r) > RUNGS.index(rung):
                 rung = r
@@ -934,7 +982,7 @@ class StitchedFunction:
                                  and not fallbacks and not poisoned
                                  and (not groups_from_cache or tuned_fresh
                                       or (entry or {}).get("format")
-                                      != FORMAT_VERSION))
+                                      != entry_format_for(groups)))
         if store_fresh or store_groups_backfill:
             em_of_pattern = {em.parts[0]: em for em in emitted
                              if len(em.parts) == 1}
@@ -989,6 +1037,7 @@ class StitchedFunction:
             groups=[g.parts for g in groups],
             n_groups=len(groups),
             n_stitched=sum(1 for g in groups if g.stitched),
+            n_anchored=sum(1 for g in groups if g.anchors),
             stitched_hbm_bytes_saved=sum(e.hbm_saved for e in emitted),
             emission_reused=reused,
             beam_width=(stitch_stats.beam_width if stitch_stats else 0),

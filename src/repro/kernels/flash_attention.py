@@ -28,9 +28,12 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                 scale: float, causal: bool, sq: int, skv: int,
-                 blk_q: int, blk_k: int):
+def _attn_kernel(*refs, scale: float, causal: bool, sq: int, skv: int,
+                 blk_q: int, blk_k: int, score_mod=None, n_score: int = 0):
+    q_ref, k_ref, v_ref = refs[:3]
+    score_refs = refs[3: 3 + n_score]
+    o_ref = refs[3 + n_score]
+    m_ref, l_ref, acc_ref = refs[3 + n_score + 1:]
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -47,6 +50,15 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+
+    if score_mod is not None:
+        # anchored stitching: the graph's own pre-softmax chain (scale /
+        # bias / mask) folded into the inner loop -- applied before the
+        # kv-padding and causal masks so a folded mask cannot resurrect
+        # padded columns.
+        blocks = tuple(r[...].reshape(r.shape[-2], r.shape[-1])
+                       for r in score_refs)
+        s = score_mod(s, *blocks).astype(jnp.float32)
 
     q_idx = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
     k_idx = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
@@ -74,8 +86,17 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                     block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+                    score_mod=None, score_args=(),
                     interpret: bool = True):
-    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; returns [B, Hq, Sq, D]."""
+    """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]; returns [B, Hq, Sq, D].
+
+    ``score_mod`` (anchored stitching) rewrites the scaled score block
+    inside the inner loop: called as ``score_mod(s, *blocks)`` with ``s``
+    the f32 [blk_q, blk_k] tile and one 2D block per entry of
+    ``score_args``.  Each score arg must be 4D with every dim either 1
+    or the matching full extent of (B, Hq, Sq, Skv); size-1 dims are
+    pinned, full dims tile with the grid.
+    """
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
@@ -92,11 +113,29 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
         k = jnp.pad(k, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, Skp - Skv), (0, 0)))
 
+    score_specs = []
+    padded_scores = []
+    for a in score_args:
+        d0, d1, d2, d3 = a.shape
+        if d2 == Sq and Sqp != Sq:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+        if d3 == Skv and Skp != Skv:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, Skp - Skv)))
+        padded_scores.append(a)
+        bq2 = blk_q if d2 == Sq else 1
+        bk3 = blk_k if d3 == Skv else 1
+        score_specs.append(pl.BlockSpec(
+            (1, 1, bq2, bk3),
+            lambda b, h, iq, ik, d0=d0, d1=d1, d2=d2, d3=d3: (
+                b if d0 == B else 0, h if d1 == Hq else 0,
+                iq if d2 == Sq else 0, ik if d3 == Skv else 0)))
+
     grid = (B, Hq, Sqp // blk_q, Skp // blk_k)
 
     out = pl.pallas_call(
         functools.partial(_attn_kernel, scale=scale, causal=causal,
-                          sq=Sq, skv=Skv, blk_q=blk_q, blk_k=blk_k),
+                          sq=Sq, skv=Skv, blk_q=blk_q, blk_k=blk_k,
+                          score_mod=score_mod, n_score=len(score_args)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, blk_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
@@ -104,6 +143,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                          lambda b, h, iq, ik: (b, h // group, ik, 0)),
             pl.BlockSpec((1, 1, blk_k, D),
                          lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            *score_specs,
         ],
         out_specs=pl.BlockSpec((1, 1, blk_q, D),
                                lambda b, h, iq, ik: (b, h, iq, 0)),
@@ -114,7 +154,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
             pltpu.VMEM((blk_q, D), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, *padded_scores)
     return out[:, :, :Sq, :]
 
 

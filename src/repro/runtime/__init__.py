@@ -4,7 +4,8 @@ poison list, watchdog, retry/circuit-breaker) for the compiler and
 serving path."""
 from .guard import (CacheCorruptError, CircuitBreaker, EmitError,
                     FallbackRecord, GuardError, PoisonList, RaceTimeoutError,
-                    RetryPolicy, RUNG_BASELINE, RUNG_PATTERNS, RUNG_STITCHED,
+                    RetryPolicy, RUNG_ANCHORED, RUNG_BASELINE, RUNG_PATTERNS,
+                    RUNG_STITCHED,
                     RUNGS, VerifyMismatchError, VerifyPolicy,
                     outputs_mismatch, race_timeout_s, with_watchdog)
 from .fault_tolerance import RestartableLoop, StragglerMonitor
@@ -12,7 +13,8 @@ from .fault_tolerance import RestartableLoop, StragglerMonitor
 __all__ = [
     "CacheCorruptError", "CircuitBreaker", "EmitError", "FallbackRecord",
     "GuardError", "PoisonList", "RaceTimeoutError", "RestartableLoop",
-    "RetryPolicy", "RUNG_BASELINE", "RUNG_PATTERNS", "RUNG_STITCHED",
+    "RetryPolicy", "RUNG_ANCHORED", "RUNG_BASELINE", "RUNG_PATTERNS",
+    "RUNG_STITCHED",
     "RUNGS", "StragglerMonitor", "VerifyMismatchError", "VerifyPolicy",
     "outputs_mismatch", "race_timeout_s", "with_watchdog",
 ]

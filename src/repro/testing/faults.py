@@ -7,6 +7,8 @@ each failure on demand, reproducibly, in CI.  This module provides
 named injection points the pipeline consults at its fault-prone seams:
 
   ``emit_fail``         group emission raises (Pallas lowering error)
+  ``anchor_emit_fail``  an *anchored* group's emission raises, dropping
+                        that group one rung (anchored -> stitched)
   ``cache_corrupt``     a plan-cache store writes a torn/garbage entry
   ``race_crash``        one autotune race branch crashes when executed
   ``numeric_mismatch``  shadow verification sees a silently-wrong kernel
@@ -41,8 +43,8 @@ from dataclasses import dataclass, field
 ENV_FAULTS = "REPRO_FAULTS"
 
 #: The named injection points the pipeline consults.
-POINTS = ("emit_fail", "cache_corrupt", "race_crash", "numeric_mismatch",
-          "tuner_hang")
+POINTS = ("emit_fail", "anchor_emit_fail", "cache_corrupt", "race_crash",
+          "numeric_mismatch", "tuner_hang")
 
 #: Spec keys that configure the fault itself rather than match context.
 _CONFIG_KEYS = ("times", "sleep")

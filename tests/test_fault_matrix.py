@@ -21,7 +21,7 @@ import pytest
 
 from repro.core import StitchedFunction
 from repro.core.plan_cache import PlanCache
-from repro.runtime import RUNG_BASELINE, RUNG_STITCHED
+from repro.runtime import RUNG_ANCHORED, RUNG_BASELINE, RUNG_STITCHED
 from repro.testing import faults
 
 rng = np.random.default_rng(31)
@@ -40,6 +40,16 @@ def _deep(x, g, b):
     return x
 
 
+def _anchored_deep(x, g, b, w, x2):
+    """One anchored group (epilogue chain folded into a matmul) next to
+    a sibling memory-only group: the anchored fault must degrade only
+    the anchored group, one rung, while the sibling stays stitched."""
+    h = _ln(x, g, b) @ w                      # chain -> anchor
+    y = jnp.tanh(h) * 0.5 + 1.0               # epilogue chain
+    z = jax.nn.gelu(x2, approximate=True) + x2  # sibling group
+    return y, z
+
+
 def _args(R=16, C=256):
     return (rng.standard_normal((R, C)).astype(np.float32),
             (np.abs(rng.standard_normal(C)) + 0.5).astype(np.float32),
@@ -50,6 +60,7 @@ def _args(R=16, C=256):
 #: its seam (a race fault needs a race; a verify fault needs verification).
 _KNOBS = {
     "emit_fail": {},
+    "anchor_emit_fail": {},
     "cache_corrupt": {},
     "race_crash": {"REPRO_AUTOTUNE": "force"},
     "numeric_mismatch": {"REPRO_VERIFY": "first"},
@@ -77,25 +88,44 @@ def test_fault_matrix_pipeline_completes_correctly(point, monkeypatch,
     faults.reset()  # (re)arm from the environment -- the CI-leg path
     assert faults.armed(point)
 
+    fn = _deep
     args = _args()
-    ref = _deep(*(jnp.asarray(a) for a in args))
+    if point == "anchor_emit_fail":
+        fn = _anchored_deep
+        args = args + (rng.standard_normal((256, 64)).astype(np.float32),
+                       rng.standard_normal((32, 128)).astype(np.float32))
+    ref = fn(*(jnp.asarray(a) for a in args))
     autotune = knobs.get("REPRO_AUTOTUNE") == "force"
-    sf = StitchedFunction(_deep, plan_cache=str(tmp_path),
+    sf = StitchedFunction(fn, plan_cache=str(tmp_path),
                           autotune=autotune)
     out = sf(*args)
     out2 = sf(*args)                       # recovery path runs clean too
     rep = sf.reports()[0]
 
     for o in (out, out2):
-        np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
-                                   rtol=2e-4, atol=2e-4)
+        for got, want in zip(jax.tree_util.tree_leaves(o),
+                             jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-4, atol=2e-4)
 
     fired = faults._active().get(point)
     assert fired is not None and fired.fired >= 1, \
         f"{point} never reached its injection seam"
 
     if point == "emit_fail":
-        assert rep.fallbacks and rep.rung != RUNG_STITCHED
+        assert rep.fallbacks and rep.rung not in (RUNG_ANCHORED,
+                                                  RUNG_STITCHED)
+        assert PlanCache(str(tmp_path)).load(rep.signature) is None
+    elif point == "anchor_emit_fail":
+        # the anchored group dropped exactly one rung (anchored ->
+        # unanchored stitched); the sibling memory-only group kept its
+        # stitched kernel, so the coarsest rung is "stitched", never
+        # "patterns" or "baseline".
+        assert rep.n_anchored >= 1
+        assert rep.fallbacks and all(r == RUNG_STITCHED
+                                     for _g, r, _r in rep.fallbacks)
+        assert rep.rung == RUNG_STITCHED
+        # a degraded compile is never persisted
         assert PlanCache(str(tmp_path)).load(rep.signature) is None
     elif point == "cache_corrupt":
         # torn store: the next process quarantines the entry and misses

@@ -24,8 +24,8 @@ from repro.core.plan_cache import PlanCache, entry_checksum
 from repro.runtime import (CacheCorruptError, CircuitBreaker, EmitError,
                            FallbackRecord, GuardError, PoisonList,
                            RaceTimeoutError, RestartableLoop, RetryPolicy,
-                           RUNG_BASELINE, RUNG_PATTERNS, RUNG_STITCHED,
-                           RUNGS, VerifyMismatchError, VerifyPolicy,
+                           RUNG_ANCHORED, RUNG_BASELINE, RUNG_PATTERNS,
+                           RUNG_STITCHED, RUNGS, VerifyMismatchError, VerifyPolicy,
                            outputs_mismatch, with_watchdog)
 from repro.serving import BackgroundTuner
 from repro.testing import faults
@@ -82,7 +82,8 @@ def test_error_taxonomy():
                 VerifyMismatchError):
         assert issubclass(exc, GuardError)
     assert issubclass(GuardError, RuntimeError)
-    assert RUNGS == (RUNG_STITCHED, RUNG_PATTERNS, RUNG_BASELINE)
+    assert RUNGS == (RUNG_ANCHORED, RUNG_STITCHED, RUNG_PATTERNS,
+                     RUNG_BASELINE)
     rec = FallbackRecord(2, RUNG_PATTERNS, "boom")
     assert rec.as_tuple() == (2, "patterns", "boom")
 

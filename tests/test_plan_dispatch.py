@@ -164,7 +164,8 @@ def test_plan_cache_roundtrip(tmp_path):
     cache = PlanCache(str(tmp_path))
     cache.store(sig, plan_to_entry(plan, schedules, sig))
     entry = cache.load(sig)
-    assert entry is not None and entry["format"] == FORMAT_VERSION
+    # a pattern-only entry carries no anchored groups -> native v5
+    assert entry is not None and entry["format"] == 5
     decoded = entry_to_plan(entry, graph)
     assert decoded is not None
     plan2, overrides = decoded

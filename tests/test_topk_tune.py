@@ -27,7 +27,7 @@ from repro.core import autotune as autotune_mod
 from repro.core import stitch as stitch_mod
 from repro.core.autotune import tune_partitions
 from repro.core.ir import FusionPlan, Pattern
-from repro.core.plan_cache import FORMAT_VERSION, PlanCache, \
+from repro.core.plan_cache import PlanCache, \
     entry_partition_source
 from repro.core.stitcher import (DEFAULT_TOPK, TopKResult, _state_rank_key,
                                  _State, topk_from_env)
@@ -196,7 +196,7 @@ def test_measured_partition_disagreement_end_to_end(monkeypatch, tmp_path):
     np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-4)
 
     entry = PlanCache(str(tmp_path)).load(rep1.signature)
-    assert entry["format"] == FORMAT_VERSION
+    assert entry["format"] == 5            # anchor-free plan: native v5
     assert entry["partition_source"] == "measured"
     assert entry_partition_source(entry) == "measured"
 
@@ -249,7 +249,7 @@ def test_v3_entry_degrades_to_remeasure_and_upgrades(monkeypatch, tmp_path):
     assert rep2.partition_source == "measured"
     assert calls                           # the partition was re-raced
     upgraded = PlanCache(str(tmp_path)).load(rep1.signature)
-    assert upgraded["format"] == FORMAT_VERSION
+    assert upgraded["format"] == 5         # anchor-free plan: native v5
     assert upgraded["partition_source"] == "measured"
     ref = np.asarray(_deep(*(jnp.asarray(a) for a in args)))
     np.testing.assert_allclose(np.asarray(sf2(*args)), ref,

@@ -66,7 +66,7 @@ def test_opaque_boundaries():
     w = np.random.randn(8, 16).astype(np.float32)
     G = trace(f, x, w)
     kinds = {G.node(n).prim: G.node(n).kind for n in G.topo_order()}
-    assert kinds.get("dot_general") == OpKind.OPAQUE
+    assert kinds.get("dot_general") == OpKind.ANCHOR
     assert kinds.get("tanh") == OpKind.EXPENSIVE_EW
 
 
