@@ -59,7 +59,7 @@ def main() -> None:
                     choices=["fig1", "table2", "fig7", "overhead", "roofline",
                              "plan_time", "stitch_groups", "beam_stitch",
                              "topk_tune", "recompute", "serving",
-                             "guard_overhead", "anchor"])
+                             "guard_overhead", "anchor", "spmd_stitch"])
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write structured per-row records")
     args = ap.parse_args()
@@ -67,8 +67,9 @@ def main() -> None:
     from . import (bench_anchor_fusion, bench_beam_stitch,
                    bench_fig1_layernorm, bench_fig7_speedup,
                    bench_guard_overhead, bench_overhead, bench_plan_time,
-                   bench_recompute, bench_serving, bench_stitch_groups,
-                   bench_table2_breakdown, bench_topk_tune, roofline)
+                   bench_recompute, bench_serving, bench_spmd_stitch,
+                   bench_stitch_groups, bench_table2_breakdown,
+                   bench_topk_tune, roofline)
 
     suites = {
         "fig1": bench_fig1_layernorm.run,
@@ -84,6 +85,7 @@ def main() -> None:
         "serving": bench_serving.run,
         "guard_overhead": bench_guard_overhead.run,
         "anchor": bench_anchor_fusion.run,
+        "spmd_stitch": bench_spmd_stitch.run,
     }
     selected = [args.only] if args.only else list(suites)
 

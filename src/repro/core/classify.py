@@ -53,6 +53,18 @@ _ANCHOR = {
     "scaled_dot_product_attention", "flash_attention",
 }
 
+# Cross-shard data movement: collectives bound to mesh axes (traced via
+# ``axis_env`` for per-shard functions) plus GSPMD resharding points.
+# Hard stitch boundaries -- a kernel cannot span a network transfer --
+# but distinct from OPAQUE so the stitcher can count them and the beam
+# can deliberately fold the flanking elementwise chains into the
+# neighboring groups (FlashFuser's inter-core expansion, inverted:
+# fuse *up to* the wire, never across it).
+_COLLECTIVE = {
+    "psum", "pmax", "pmin", "all_gather", "reduce_scatter", "all_to_all",
+    "ppermute", "pbroadcast", "axis_index", "sharding_constraint",
+}
+
 # Everything else (gather, scatter, cumsum, sort, dynamic_slice, rng,
 # while/scan/cond, argmax, ...) is OPAQUE: a hard fusion boundary,
 # exactly like ops the paper's code generator cannot stitch.
@@ -73,6 +85,8 @@ def classify(prim_name: str) -> OpKind:
         return OpKind.TRANSPOSE
     if prim_name in _ANCHOR:
         return OpKind.ANCHOR
+    if prim_name in _COLLECTIVE:
+        return OpKind.COLLECTIVE
     return OpKind.OPAQUE
 
 
@@ -116,6 +130,12 @@ _VPU_COST: dict[str, float] = {
     "conv_general_dilated": 32.0,
     "scaled_dot_product_attention": 64.0,
     "flash_attention": 64.0,
+    # collectives: the wire dominates, not the VPU; a nominal per-element
+    # cost keeps them from pricing as free while the boundary rule (not
+    # this number) is what actually keeps them out of kernels.
+    **{p: 2.0 for p in _COLLECTIVE},
+    "axis_index": 0.0,
+    "sharding_constraint": 0.0,
 }
 
 

@@ -92,6 +92,42 @@ def pattern_emittable(graph: Graph, pattern: frozenset[int],
     return all(graph.node(n).prim in EMITTABLE_PRIMS for n in pattern)
 
 
+def check_shard_emittable(graph: Graph, union: frozenset[int], shard,
+                          group_index: int) -> None:
+    """Sanity-check one stitch group for sharded (shard_map) emission.
+
+    The group's member shapes are already *per-shard* (the sharded build
+    traces on local shapes), so the existing emitters apply unchanged --
+    what can still go wrong is the shard layout itself: a collective
+    leaking into the union, or a spec whose divisibility repair left a
+    degenerate (zero-extent) local dim.  Raises ``guard.EmitError`` so
+    ``stitch._finalize``'s existing ladder degrades exactly this group
+    to the per-pattern rung while sibling groups stay stitched.
+
+    ``shard_spec_fail`` is this seam's fault point: firing it simulates
+    a bad/non-divisible PartitionSpec reaching emission.
+    """
+    from repro.runtime.guard import EmitError
+    from repro.testing import faults as _faults
+
+    if _faults.fire("shard_spec_fail", group=group_index) is not None:
+        raise EmitError(
+            f"group {group_index}: injected shard_spec_fail "
+            "(simulated non-divisible PartitionSpec)")
+    for nid in union:
+        node = graph.node(nid)
+        if node.kind is OpKind.COLLECTIVE:
+            raise EmitError(
+                f"group {group_index}: collective {node.prim} (%{nid}) "
+                "inside a stitch group -- collectives are hard group "
+                "boundaries")
+        if any(d <= 0 for d in node.spec.shape):
+            raise EmitError(
+                f"group {group_index}: %{nid} has degenerate per-shard "
+                f"shape {node.spec.shape} under mesh "
+                f"{dict(shard.mesh.shape)}")
+
+
 # --------------------------------------------------------------------------
 # compute-anchored groups: structural matchers
 # --------------------------------------------------------------------------

@@ -47,6 +47,20 @@ def recompute_enabled() -> bool:
         not in ("0", "off", "false")
 
 
+#: Env switch: set ``REPRO_SHARD=0`` to disable SPMD-aware stitching.
+#: Ambient mesh contexts stop keying signatures; an *explicit* mesh still
+#: dispatches correctly but pinned to the sharded XLA baseline rung (the
+#: shard_map wrap stays -- only the stitched emission is disabled).
+#: Deliberately NOT hashed into ``graph_signature`` (same contract as
+#: ``REPRO_RECOMPUTE`` / ``REPRO_ANCHOR``: knobs degrade, never re-key).
+ENV_SHARD = "REPRO_SHARD"
+
+
+def shard_enabled() -> bool:
+    return os.environ.get(ENV_SHARD, "1").lower() \
+        not in ("0", "off", "false")
+
+
 @dataclass(frozen=True)
 class Hardware:
     """TPU v5e-class chip (the target in this repo's roofline)."""

@@ -61,11 +61,19 @@ class PatternBounds:
 class CostContext:
     """Memoized cost-model queries for one graph + hardware config."""
 
-    def __init__(self, graph: Graph, hw=None):
+    def __init__(self, graph: Graph, hw=None, shard=None):
         from .cost_model import V5E
 
         self.graph = graph
         self.hw = hw if hw is not None else V5E
+        #: Active ``repro.core.shard.ShardCtx`` (or None).  The graph a
+        #: sharded build hands this context is already traced on
+        #: *per-shard* shapes, so every memoized query below prices
+        #: per-shard row counts / VMEM pressure / interface bytes with
+        #: no formula changes; the planner and emitter read ``shard``
+        #: for mesh-aware decisions (collective boundary accounting,
+        #: shard_map emission, spec-divisibility checks).
+        self.shard = shard
         self.outset = frozenset(graph.outputs)
         self._info: dict[frozenset[int], RowInfo | None] = {}
         self._bounds: dict[frozenset[int], PatternBounds] = {}

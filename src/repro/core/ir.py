@@ -34,6 +34,13 @@ class OpKind(enum.Enum):
     #                              a stitch group may open *around* it and fold
     #                              adjacent memory-intensive chains into its
     #                              kernel body (never a plain pattern member)
+    COLLECTIVE = "collective"    # psum / all_gather / reduce_scatter /
+    #                              sharding_constraint: cross-shard data
+    #                              movement.  A hard stitch-group boundary
+    #                              (never fusible, never emittable) -- the
+    #                              beam folds the pre/post-collective
+    #                              elementwise chains into the *neighboring*
+    #                              groups instead.
     OPAQUE = "opaque"            # gather / scan / ... : hard fusion boundary
 
 

@@ -107,26 +107,48 @@ DEFAULT_EVICT_GRACE_S = 30.0
 #: v5, so ``REPRO_ANCHOR=0`` runs reproduce pre-anchor entries
 #: byte-for-byte; v6 entries loaded with the knob off degrade to
 #: re-stitching instead of silently re-enabling the scheme.
-FORMAT_VERSION = 6
+#: v7: SPMD-aware plans (top-level ``mesh`` record: shape + axis names)
+#: from sharded stitching.  The *signature* of a sharded graph already
+#: hashes the mesh (see ``graph_signature``), so 1-device and 8-device
+#: plans can never collide; the entry-side record is observability +
+#: load-time sanity.  Mesh-free plans are still written as v6/v5 with
+#: byte-identical signatures, so every pre-shard entry keeps loading
+#: and ``REPRO_SHARD=0`` runs never see v7 at all (explicit-mesh builds
+#: with the knob off pin the baseline rung and skip the store).
+FORMAT_VERSION = 7
 
 #: Formats ``entry_to_plan`` / ``entry_to_groups`` still understand.
-SUPPORTED_FORMATS = (2, 3, 4, 5, FORMAT_VERSION)
+SUPPORTED_FORMATS = (2, 3, 4, 5, 6, FORMAT_VERSION)
 
 
-def entry_format_for(groups) -> int:
-    """The format ``plan_to_entry`` stamps for this group composition:
-    v6 only when an anchored group forces it (see the v6 note above)."""
-    if groups and any(getattr(g, "anchors", ()) for g in groups):
+def entry_format_for(groups, shard=None) -> int:
+    """The format ``plan_to_entry`` stamps for this composition: v7 only
+    when a shard context forces it, v6 only for anchored groups (see the
+    version ladder above) -- so mesh-free, anchor-free plans reproduce
+    pre-shard entries byte-for-byte."""
+    if shard is not None:
         return FORMAT_VERSION
+    if groups and any(getattr(g, "anchors", ()) for g in groups):
+        return 6
     return 5
 
 
 # ---------------------------------------------------------------------------
 # canonical graph signature
 # ---------------------------------------------------------------------------
-def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
+def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True,
+                    shard=None) -> str:
     """Canonical sha256 of (topology, prims, shapes/dtypes, params, hw,
-    planner configuration)."""
+    planner configuration).
+
+    ``shard`` (a ``repro.core.shard.ShardCtx``) folds mesh shape + axis
+    names + input/output PartitionSpecs into the key, so a plan built on
+    per-shard shapes for an 8-device mesh can never collide with a
+    1-device plan (or with a different mesh/layout of the same graph).
+    Mesh-free graphs hash nothing extra: their signatures are
+    byte-identical to every pre-v7 release, which is what keeps v6/v5
+    entries loadable.
+    """
     from .explorer import MAX_GROUP, MAX_PATTERN, TOP_K
     from .planner import BEAM_WIDTH
     from .stitcher import beam_width_from_env
@@ -148,6 +170,8 @@ def graph_signature(graph: Graph, hw, *, remote_fusion: bool = True) -> str:
       hw.launch_s, hw.hbm_latency_s)
     w("knobs", TOP_K, MAX_GROUP, MAX_PATTERN, BEAM_WIDTH, remote_fusion,
       beam_width_from_env())
+    if shard is not None:
+        w("mesh", *shard.signature_items())
     w("io", tuple(graph.inputs), tuple(graph.outputs))
     for nid in graph.topo_order():
         n = graph.node(nid)
@@ -170,7 +194,8 @@ def plan_to_entry(plan: FusionPlan, schedules: list[dict],
                   signature: str,
                   groups: "list[StitchGroup] | None" = None,
                   group_schedules: list[dict] | None = None,
-                  partition_source: str | None = None) -> dict:
+                  partition_source: str | None = None,
+                  shard=None) -> dict:
     """Serialize a chosen plan + per-pattern schedule picks.
 
     ``groups`` (with per-group ``group_schedules``) additionally records
@@ -182,13 +207,15 @@ def plan_to_entry(plan: FusionPlan, schedules: list[dict],
     trusts a measured partition and re-races a modeled one.
     """
     entry = {
-        "format": entry_format_for(groups),
+        "format": entry_format_for(groups, shard),
         "signature": signature,
         "patterns": [
             {"members": sorted(pat.members), **sched}
             for pat, sched in zip(plan.patterns, schedules)
         ],
     }
+    if shard is not None:
+        entry["mesh"] = shard.mesh_record()
     if partition_source in ("model", "measured"):
         entry["partition_source"] = partition_source
     if groups is not None:

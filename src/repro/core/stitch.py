@@ -62,7 +62,7 @@ from .plan_cache import PlanCache, entry_format_for, \
     graph_signature, override_fp, plan_to_entry
 from .planner import PlanStats, make_plan, plan_stats
 from .stitcher import absorb_anchors, search_groups
-from .tracer import bind_node, trace
+from .tracer import bind_node, trace, trace_with_shape
 
 
 @dataclass
@@ -103,6 +103,11 @@ class StitchReport:
     caps_hit: dict = field(default_factory=dict)  # guardrail -> truncations
     plan_cache_hits: int = 0         # this cache instance's load hits
     plan_cache_misses: int = 0       # ...and misses (absent/corrupt entries)
+    # -- SPMD-aware stitching (one plan replayed per shard) ------------------
+    sharded: bool = False            # a ShardCtx was active for this compile
+    mesh_axes: tuple = ()            # ((axis, size), ...) of the mesh
+    n_collective: int = 0            # collective nodes in the (local) graph
+    collective_boundaries: int = 0   # segment splits forced by a collective
     # -- fail-safe compilation (fallback ladder + shadow verification) -------
     fallbacks: list = field(default_factory=list)
     #                                  (group_id, rung, reason) per
@@ -146,7 +151,8 @@ class _Compiled:
                  donate: bool = False,
                  donate_argnums: tuple[int, ...] | None = None,
                  verify_policy: VerifyPolicy | None = None,
-                 on_quarantine: Callable | None = None):
+                 on_quarantine: Callable | None = None,
+                 shard=None):
         self.graph = graph
         self.plan = plan
         self.emitted = emitted
@@ -154,6 +160,12 @@ class _Compiled:
         self.report = report
         self.out_tree = out_tree
         self.dispatch = dispatch
+        #: explicit ShardCtx: the schedule body is the *per-shard*
+        #: program (traced on local shapes), so both the stitched
+        #: dispatch and the XLA baseline wrap in ``shard_map`` -- one
+        #: compiled plan replays on every shard, and the guard ladder /
+        #: shadow verification compare global-view outputs per-shard.
+        self.shard = shard if shard is not None and shard.explicit else None
         self.exec_count = 0
         self.call_count = 0           # __call__ invocations (verify sampling)
         self.verify_policy = verify_policy or VerifyPolicy("off")
@@ -173,8 +185,9 @@ class _Compiled:
                 self.donate_argnums = tuple(
                     i for i, nid in enumerate(graph.inputs)
                     if nid not in outset)
-        self._jitted = jax.jit(self._run_schedule,
-                               donate_argnums=self.donate_argnums)
+        body = (self.shard.wrap(self._run_schedule)
+                if self.shard is not None else self._run_schedule)
+        self._jitted = jax.jit(body, donate_argnums=self.donate_argnums)
 
     def _run_schedule(self, *flat_args):
         """Execute the fusion schedule (traceable; jitted for dispatch)."""
@@ -218,7 +231,9 @@ class _Compiled:
     @property
     def _baseline(self):
         if self._baseline_fn is None:
-            self._baseline_fn = jax.jit(self._run_baseline)
+            body = (self.shard.wrap(self._run_baseline)
+                    if self.shard is not None else self._run_baseline)
+            self._baseline_fn = jax.jit(body)
         return self._baseline_fn
 
     def _quarantine(self, reason: str) -> None:
@@ -494,6 +509,7 @@ class _RaceContext:
     loaded_over_by_parts: dict
     stitch_stats: Any
     out_tree: Any
+    shard: Any = None        # ambient ShardCtx (explicit builds never race)
 
 
 class StitchedFunction:
@@ -503,10 +519,29 @@ class StitchedFunction:
                  autotune: bool = False, stitch_groups: bool = True,
                  donate: bool = False,
                  donate_argnums: tuple[int, ...] | None = None,
-                 background: Any = None):
+                 background: Any = None,
+                 mesh: Any = None, in_specs: Any = None,
+                 out_specs: Any = None):
         if dispatch not in ("single", "interpret"):
             raise ValueError(
                 f"dispatch must be 'single' or 'interpret', got {dispatch!r}")
+        from .shard import ShardCtx
+
+        if in_specs is not None or out_specs is not None:
+            if mesh is None:
+                raise ValueError("in_specs/out_specs require a mesh")
+            if in_specs is None or out_specs is None:
+                raise ValueError(
+                    "explicit sharding needs BOTH in_specs and out_specs")
+            if dispatch != "single":
+                raise ValueError(
+                    "dispatch='interpret' cannot run inside shard_map; "
+                    "use dispatch='single' with a mesh")
+        #: explicit: fn is the *per-shard* (shard_map-style) body, planned
+        #: on local shapes and dispatched through shard_map.  Mesh-only:
+        #: signature/cache keying (the GSPMD global-view serving path).
+        self._shard = (ShardCtx.build(mesh, in_specs, out_specs)
+                       if mesh is not None else None)
         self._fn = fn
         self._hw = hw
         self._interpret = interpret
@@ -535,9 +570,28 @@ class StitchedFunction:
         self._compile_lock = threading.Lock()
         self._swap_lock = threading.Lock()
 
+    def _shard_ctx(self):
+        """The active shard context for the next compile: the explicit
+        one this function was constructed with, else the ambient
+        ``use_mesh`` context (signature-keying only; ignored when
+        ``$REPRO_SHARD=0``)."""
+        from .cost_model import shard_enabled
+        from .shard import ShardCtx
+
+        if self._shard is not None:
+            return self._shard
+        if not shard_enabled():
+            return None
+        return ShardCtx.ambient()
+
     def _signature(self, flat_args) -> tuple:
-        return tuple((tuple(np.shape(a)), str(jnp.result_type(a)))
+        base = tuple((tuple(np.shape(a)), str(jnp.result_type(a)))
                      for a in flat_args)
+        # the ambient mesh can change between calls (serving enters /
+        # leaves ``use_mesh``): a sharded compile must never be served
+        # to an unsharded call, so the mesh keys the dispatch table too.
+        shard = self._shard_ctx()
+        return base + ((shard.mesh_key(),) if shard is not None else ())
 
     def _load_cached_plan(self, graph: Graph, sig: str
                           ) -> tuple[FusionPlan, list[dict], dict] | None:
@@ -584,9 +638,22 @@ class StitchedFunction:
             a, k = jax.tree_util.tree_unflatten(in_tree, fargs)
             return self._fn(*a, **k)
 
-        graph = trace(flat_fn, *flat)
-        ctx = CostContext(graph, self._hw)
-        sig = graph_signature(graph, self._hw, remote_fusion=self._remote)
+        shard = self._shard_ctx()
+        explicit_shard = shard is not None and shard.explicit
+        out_tree = None
+        if explicit_shard:
+            # the per-shard program IS the plan's subject: trace on local
+            # shapes with the mesh axes bound, so collectives become
+            # COLLECTIVE nodes and every row count / VMEM / HBM figure
+            # downstream is per-shard with no cost-formula changes.
+            graph, out_tree, _ = trace_with_shape(
+                flat_fn, *shard.local_args(flat),
+                axis_env=shard.axis_env())
+        else:
+            graph = trace(flat_fn, *flat)
+        ctx = CostContext(graph, self._hw, shard=shard)
+        sig = graph_signature(graph, self._hw, remote_fusion=self._remote,
+                              shard=shard)
 
         # persistent cache: an identical graph signature in any process
         # reuses the stored patterns + group composition + tuned
@@ -647,8 +714,13 @@ class StitchedFunction:
         if self._stitch_groups:
             from .autotune import autotune_available
 
-            defer = self._background is not None
-            can_tune = (self._autotune or defer) and autotune_available()
+            # explicit-shard compiles neither race nor measure: the
+            # in-process tuner runs unsharded branches that would price
+            # a different (global-shape) program.  Sharded racing is a
+            # follow-on; the analytic sharded cost model decides.
+            defer = self._background is not None and not explicit_shard
+            can_tune = ((self._autotune or defer) and not explicit_shard
+                        and autotune_available())
             loaded = (entry_to_groups(entry, plan, graph)
                       if entry is not None else None)
             cached_source = (entry_partition_source(entry)
@@ -731,15 +803,22 @@ class StitchedFunction:
             groups = [StitchGroup((p.members,)) for p in plan.patterns]
             group_overrides = [{} for _ in groups]
 
-        # determine output tree (also needed by a deferred race rebuild)
-        out_shape = jax.eval_shape(flat_fn, *flat)
-        _, out_tree = jax.tree_util.tree_flatten(out_shape)
+        # determine output tree (also needed by a deferred race rebuild).
+        # An explicit-shard build already has it from the local-shape
+        # trace; eval_shape on the *global* args would re-trace the
+        # per-shard body without its axis_env and fail on the first
+        # collective.
+        if out_tree is None:
+            out_shape = jax.eval_shape(flat_fn, *flat)
+            _, out_tree = jax.tree_util.tree_flatten(out_shape)
         if race_ctx is not None:
             race_ctx.out_tree = out_tree
+            race_ctx.shard = shard
 
         # with a background executor, measurement never blocks the cold
         # path: group tile sweeps run in ``rerace`` alongside the race.
-        tune_groups = self._autotune and self._background is None
+        tune_groups = self._autotune and self._background is None \
+            and not explicit_shard
         return self._finalize(
             graph=graph, ctx=ctx, sig=sig, plan=plan, overrides=overrides,
             entry=entry, cached_hit=cached is not None, autotuned=autotuned,
@@ -749,7 +828,7 @@ class StitchedFunction:
             partition_index=partition_index,
             partition_candidates=partition_candidates,
             tune_groups=tune_groups, t0=t0, out_tree=out_tree,
-            race_ctx=race_ctx)
+            race_ctx=race_ctx, shard=shard)
 
     def _finalize(self, *, graph: Graph, ctx: CostContext, sig: str,
                   plan: FusionPlan, overrides: list[dict],
@@ -758,10 +837,19 @@ class StitchedFunction:
                   groups_from_cache: bool, stitch_stats,
                   partition_source: str, partition_index: int,
                   partition_candidates: int, tune_groups: bool, t0: float,
-                  out_tree, race_ctx: "_RaceContext | None") -> _Compiled:
+                  out_tree, race_ctx: "_RaceContext | None",
+                  shard=None) -> _Compiled:
         """Group tuning + emission + plan-cache store + report: the part
         of compilation shared by the cold path and the background
         ``rerace`` rebuild."""
+        from .cost_model import shard_enabled
+
+        explicit_shard = shard is not None and shard.explicit
+        # kill switch: the compile completes (the graph, tree and the
+        # shard_map-wrapped baseline are all still needed to answer
+        # calls correctly on the mesh) but pins the baseline rung below
+        # and skips the cache store -- degrade, never re-key.
+        shard_off = explicit_shard and not shard_enabled()
 
         # ---- measured group tuning (paper: tune the stitching scheme) -----
         # Stitched unions get their onepass/streaming phase split + tile
@@ -825,8 +913,12 @@ class StitchedFunction:
         # jit-level ``donate_argnums`` donation.
         donate_first: frozenset[int] = frozenset()
         first_idx = -1
+        # under an explicit shard the jit-level donate_argnums (outside
+        # the shard_map) still applies, but kernel-level aliasing inside
+        # the mapped body is not: the pallas_call's operands are local
+        # shards whose buffers shard_map manages.
         if (self._donate or self._donate_argnums is not None) \
-                and self._dispatch == "single":
+                and self._dispatch == "single" and not explicit_shard:
             # with explicit donate_argnums only those flat positions may
             # alias (serving donates the cache, never the params).
             allowed = (None if self._donate_argnums is None else
@@ -932,6 +1024,13 @@ class StitchedFunction:
                     reused += 1
             if em is None:
                 try:
+                    if explicit_shard:
+                        from .codegen import check_shard_emittable
+
+                        # spec-sanity seam (also the shard_spec_fail
+                        # fault site): a bad layout degrades THIS group
+                        # down the ladder, siblings stay stitched.
+                        check_shard_emittable(graph, union, shard, gi)
                     flt = _faults.fire("emit_fail", group=gi)
                     if flt is not None:
                         raise EmitError(f"injected emit_fail on group {gi}")
@@ -968,7 +1067,8 @@ class StitchedFunction:
         # below assume one emitted kernel per group).
         poisoned = self._poison.rung_for(sig) is not None
         store_fresh = (self._plan_cache is not None and not cached_hit
-                       and not fallbacks and not poisoned)
+                       and not fallbacks and not poisoned
+                       and not shard_off)
         # a cache hit whose entry lacked a usable groups section (e.g.
         # first written by a stitch_groups=False baseline run) gets the
         # freshly stitched composition written back once, so later
@@ -980,9 +1080,10 @@ class StitchedFunction:
                                  and cached_hit
                                  and self._stitch_groups
                                  and not fallbacks and not poisoned
+                                 and not shard_off
                                  and (not groups_from_cache or tuned_fresh
                                       or (entry or {}).get("format")
-                                      != entry_format_for(groups)))
+                                      != entry_format_for(groups, shard)))
         if store_fresh or store_groups_backfill:
             em_of_pattern = {em.parts[0]: em for em in emitted
                              if len(em.parts) == 1}
@@ -1018,7 +1119,8 @@ class StitchedFunction:
             self._plan_cache.store(
                 sig, plan_to_entry(plan, schedules, sig, groups=groups_arg,
                                    group_schedules=group_scheds,
-                                   partition_source=store_source))
+                                   partition_source=store_source,
+                                   shard=shard))
         plan_time = time.perf_counter() - t0
 
         stats = plan_stats(graph, plan, ctx=ctx, groups=groups)
@@ -1058,6 +1160,13 @@ class StitchedFunction:
                                if self._plan_cache is not None else 0),
             fallbacks=list(fallbacks),
             rung=rung,
+            sharded=shard is not None,
+            mesh_axes=(shard.mesh_key() if shard is not None else ()),
+            n_collective=sum(1 for n in graph.nodes.values()
+                             if n.kind is OpKind.COLLECTIVE),
+            collective_boundaries=getattr(stitch_stats,
+                                          "collective_boundaries", 0)
+            if stitch_stats else 0,
         )
 
         def _on_quarantine(reason: str, _sig=sig) -> None:
@@ -1073,11 +1182,18 @@ class StitchedFunction:
                              donate=self._donate,
                              donate_argnums=self._donate_argnums,
                              verify_policy=VerifyPolicy.from_env(),
-                             on_quarantine=_on_quarantine)
+                             on_quarantine=_on_quarantine,
+                             shard=shard)
         if poisoned:
             compiled.pin_baseline(
                 "signature poisoned: "
                 + (self._poison.reason_for(sig) or "unspecified"))
+        elif shard_off:
+            # the whole pipeline still ran (plan, emission, report) so
+            # the knob is observable; execution just pins the sharded
+            # XLA baseline rung.
+            compiled.pin_baseline(
+                "sharded stitching disabled (REPRO_SHARD=0)")
         else:
             compiled._race_ctx = race_ctx
         return compiled
@@ -1131,7 +1247,8 @@ class StitchedFunction:
             partition_source=partition_source,
             partition_index=partition_index,
             partition_candidates=len(rc.candidates),
-            tune_groups=True, t0=t0, out_tree=rc.out_tree, race_ctx=None)
+            tune_groups=True, t0=t0, out_tree=rc.out_tree, race_ctx=None,
+            shard=rc.shard)
         with self._swap_lock:
             if self._cache.get(key) is not compiled:
                 return None  # superseded: a newer swap already won
@@ -1173,7 +1290,10 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                  stitch_groups: bool = True,
                  donate: bool = False,
                  donate_argnums: tuple[int, ...] | None = None,
-                 background: Any = None) -> Callable:
+                 background: Any = None,
+                 mesh: Any = None,
+                 in_specs: Any = None,
+                 out_specs: Any = None) -> Callable:
     """Wrap ``fn`` with the FusionStitching trace->plan->stitch->emit
     pipeline.
 
@@ -1202,7 +1322,18 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
     of ``fn`` and stitches *it* too (recompute-style backward: residuals
     are the primal inputs, matching the paper's training support where the
     backward graph is just another fusion-planned graph).
+
+    ``mesh`` + ``in_specs``/``out_specs`` plan one stitched schedule
+    against the *per-shard* shapes of ``fn`` (treated as the per-shard
+    body, shard_map-style) and replay it on every shard via
+    ``shard_map`` -- collectives inside ``fn`` become hard stitch-group
+    boundaries.  Sharded plans are not differentiable (the backward
+    re-trace has no mesh context yet).
     """
+    if differentiable and mesh is not None:
+        raise ValueError(
+            "stitched_jit: differentiable=True cannot be combined with "
+            "an explicit mesh (the backward re-trace is mesh-free)")
     # differentiable wrappers keep the primal inputs as VJP residuals, so
     # the forward must not donate them out from under the backward pass.
     sf = StitchedFunction(fn, hw=hw, interpret=interpret,
@@ -1212,7 +1343,9 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                           donate=donate and not differentiable,
                           donate_argnums=(donate_argnums
                                           if not differentiable else None),
-                          background=background)
+                          background=background,
+                          mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
     if not differentiable:
         return sf
 

@@ -95,6 +95,11 @@ class StitchStats:
     topk: int = 1                # how many candidates the search was asked for
     candidates: int = 1          # distinct candidate partitions retained
     pair_swaps: int = 0          # multi-segment (2-swap) candidates assembled
+    collective_boundaries: int = 0  # segment splits forced by a sandwiched
+    #                                 collective (psum/all_gather/...): the
+    #                                 SPMD hard boundaries; the flanking
+    #                                 chains still fold into the groups on
+    #                                 either side of the wire
 
 
 @dataclass
@@ -461,6 +466,36 @@ def _segments(graph: Graph, pats: list[frozenset[int]],
     return segs
 
 
+def _collective_boundaries(graph: Graph,
+                           segs: list[list[frozenset[int]]]) -> int:
+    """How many segment splits have a collective on the wire between
+    them: a ``psum``/``all_gather``/... sandwiched between the last
+    pattern of one segment and the first of the next.  These are the
+    boundaries SPMD *forces* (a kernel cannot span the network), as
+    opposed to ordinary opaque/row-mismatch splits; the count surfaces
+    on ``StitchStats`` so tests and the SPMD benchmark can assert that
+    collectives bound groups while their flanking elementwise chains
+    still stitched into the neighbors.
+    """
+    coll = [n.nid for n in graph.nodes.values()
+            if n.kind is OpKind.COLLECTIVE]
+    if not coll or len(segs) < 2:
+        return 0
+    desc, anc = graph.reachability()
+    count = 0
+    for prev_seg, next_seg in zip(segs, segs[1:]):
+        pmask = nmask = 0
+        for p in prev_seg:
+            for nid in p:
+                pmask |= 1 << nid
+        for p in next_seg:
+            for nid in p:
+                nmask |= 1 << nid
+        if any((anc[c] & pmask) and (desc[c] & nmask) for c in coll):
+            count += 1
+    return count
+
+
 def _absorb_leftovers(graph: Graph, groups: list[list[frozenset[int]]],
                       ctx: CostContext, covered: set[int]) -> None:
     """Fold leftover fusible singletons adjacent to a group into it.
@@ -698,6 +733,7 @@ def search_groups(graph: Graph, plan: FusionPlan, hw: Hardware = V5E,
 
     segs = _segments(graph, pats, ctx)
     stats.segments = len(segs)
+    stats.collective_boundaries = _collective_boundaries(graph, segs)
 
     shape_memo: dict[tuple, tuple[int, ...]] = {}
     seg_choices: list[list[tuple[list[tuple], float]]] = []

@@ -162,10 +162,33 @@ class _Tracer:
                 write(ov_outer, inner_env[ov_inner])
 
 
-def trace(fn: Callable, *example_args, **example_kwargs) -> Graph:
-    """Trace ``fn`` on example args (arrays or ShapeDtypeStructs) to a Graph."""
-    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+def trace(fn: Callable, *example_args, axis_env=None, **example_kwargs) -> Graph:
+    """Trace ``fn`` on example args (arrays or ShapeDtypeStructs) to a Graph.
+
+    ``axis_env`` -- (name, size) pairs of the mesh axes a *per-shard*
+    function's collectives (``psum``/``all_gather``/...) bind to, i.e.
+    ``ShardCtx.axis_env()``.  With it the tracer sees the shard_map body
+    on local shapes: collectives become ``OpKind.COLLECTIVE`` nodes and
+    every downstream analysis prices per-shard row counts for free.
+    """
+    closed = jax.make_jaxpr(fn, axis_env=axis_env)(*example_args,
+                                                   **example_kwargs)
     return _Tracer().trace(closed)
+
+
+def trace_with_shape(fn: Callable, *example_args, axis_env=None,
+                     **example_kwargs):
+    """``trace`` + the function's output pytree structure.
+
+    Returns ``(graph, out_tree, out_avals)``.  The sharded build path
+    needs the tree from the *same* local-shape trace (a second
+    ``eval_shape`` on global shapes would disagree with the per-shard
+    graph), so make_jaxpr returns it alongside the jaxpr.
+    """
+    closed, shape = jax.make_jaxpr(fn, axis_env=axis_env, return_shape=True)(
+        *example_args, **example_kwargs)
+    leaves, out_tree = jax.tree_util.tree_flatten(shape)
+    return _Tracer().trace(closed), out_tree, leaves
 
 
 # --------------------------------------------------------------------------

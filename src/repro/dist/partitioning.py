@@ -81,21 +81,38 @@ def _fit_spec(spec: P, shape: tuple[int, ...], mesh, *,
     divisible dim (searched from the last dim, so expert-parallel specs
     fall back onto d_ff -- the moe_tp rule) or, with ``move=False`` or
     when no dim fits, is dropped (replicated).
+
+    A mesh axis may shard at most ONE dim of the array, so assignments
+    are deduped across the whole spec: a kept or moved entry whose axis
+    names are already carried by another dim is dropped instead (a spec
+    like ``P(("pod", "data"), None, ("data",))`` -- or a homeless axis
+    landing next to a kept copy of itself -- would otherwise produce an
+    invalid NamedSharding).
     """
+    def names_of(p) -> tuple:
+        return tuple(p) if isinstance(p, (tuple, list)) else (p,)
+
     parts = list(spec) + [None] * (len(shape) - len(spec))
     out: list[Any] = [None] * len(shape)
+    used: set[Any] = set()
     homeless = []
     for i, (p, d) in enumerate(zip(parts, shape)):
         if p is None:
             continue
+        if used.intersection(names_of(p)):
+            continue  # axis already shards an earlier dim: drop, not move
         if d % _axis_size(mesh, p) == 0:
             out[i] = p
+            used.update(names_of(p))
         elif move:
             homeless.append(p)
     for p in homeless:
+        if used.intersection(names_of(p)):
+            continue
         for i in range(len(shape) - 1, -1, -1):
             if out[i] is None and shape[i] % _axis_size(mesh, p) == 0:
                 out[i] = p
+                used.update(names_of(p))
                 break
     return P(*out)
 

@@ -29,3 +29,23 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
 def make_host_mesh():
     """1x1 mesh over the real local device (CPU smoke paths)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_test_mesh(n: int = 8):
+    """(data, model) mesh over ``n`` forced host devices (CPU CI).
+
+    Callers must already run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` -- set
+    before jax init, which in-process test code cannot do, hence the
+    ``run_sharded`` subprocess fixture in ``tests/conftest.py``.
+    ``n=1`` degenerates to the host mesh so the same test body runs
+    un-forced.
+    """
+    if n <= 1:
+        return make_host_mesh()
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"make_test_mesh({n}) needs {n} devices, have "
+            f"{len(jax.devices())}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax init")
+    return jax.make_mesh((n // 2, 2), ("data", "model"))

@@ -32,7 +32,12 @@ _DISPATCH: dict[tuple, tuple] = {}
 def _dispatch_for(mdl, stitched: bool, plan_cache: str | None = None):
     """The (prefill, decode) jitted pair for ``mdl`` -- cached across
     ``generate`` calls so repeated serving never retraces."""
-    key = (id(mdl), stitched, plan_cache)
+    from repro.core.shard import ambient_mesh_key
+
+    # a ``use_mesh`` block changes what the jitted pair compiles to
+    # (GSPMD layouts + collectives), so the ambient mesh keys the table:
+    # sharded serving never reuses a single-device compile or vice versa.
+    key = (id(mdl), stitched, plan_cache, ambient_mesh_key())
     hit = _DISPATCH.get(key)
     if hit is not None:
         return hit[1], hit[2]

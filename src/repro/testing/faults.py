@@ -13,6 +13,10 @@ named injection points the pipeline consults at its fault-prone seams:
   ``race_crash``        one autotune race branch crashes when executed
   ``numeric_mismatch``  shadow verification sees a silently-wrong kernel
   ``tuner_hang``        a measured race wedges (sleeps) until a watchdog
+  ``shard_spec_fail``   a stitch group fails the sharded-emission spec
+                        check (bad / non-divisible PartitionSpec), so
+                        that group degrades to the per-pattern rung
+                        while sibling groups stay stitched
 
 Faults are armed either via the ``REPRO_FAULTS`` environment variable
 or programmatically with the ``inject`` context manager (tests).  The
@@ -44,7 +48,7 @@ ENV_FAULTS = "REPRO_FAULTS"
 
 #: The named injection points the pipeline consults.
 POINTS = ("emit_fail", "anchor_emit_fail", "cache_corrupt", "race_crash",
-          "numeric_mismatch", "tuner_hang")
+          "numeric_mismatch", "tuner_hang", "shard_spec_fail")
 
 #: Spec keys that configure the fault itself rather than match context.
 _CONFIG_KEYS = ("times", "sleep")

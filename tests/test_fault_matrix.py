@@ -50,6 +50,30 @@ def _anchored_deep(x, g, b, w, x2):
     return y, z
 
 
+def _sharded_deep(x):
+    """Per-shard body with a psum boundary: two sibling stitch groups.
+
+    The shard-spec fault degrades the first group's emission; the
+    post-collective sibling must keep its stitched kernel.  On the
+    (1, 1) host mesh the psum over the size-1 "model" axis is the
+    identity, so the mesh-free reference below matches exactly.
+    """
+    for _ in range(4):
+        x = jnp.tanh(x) * 0.5 + x
+    s = jax.lax.psum(x, "model")
+    for _ in range(4):
+        s = jax.nn.gelu(s, approximate=True) + s
+    return s
+
+
+def _sharded_deep_ref(x):
+    for _ in range(4):
+        x = jnp.tanh(x) * 0.5 + x
+    for _ in range(4):
+        x = jax.nn.gelu(x, approximate=True) + x
+    return x
+
+
 def _args(R=16, C=256):
     return (rng.standard_normal((R, C)).astype(np.float32),
             (np.abs(rng.standard_normal(C)) + 0.5).astype(np.float32),
@@ -66,6 +90,7 @@ _KNOBS = {
     "numeric_mismatch": {"REPRO_VERIFY": "first"},
     "tuner_hang": {"REPRO_AUTOTUNE": "force", "REPRO_RACE_TIMEOUT_S": "1",
                    "_sleep": "4"},
+    "shard_spec_fail": {},
 }
 
 
@@ -88,16 +113,29 @@ def test_fault_matrix_pipeline_completes_correctly(point, monkeypatch,
     faults.reset()  # (re)arm from the environment -- the CI-leg path
     assert faults.armed(point)
 
-    fn = _deep
+    fn, ref_fn = _deep, _deep
     args = _args()
+    sf_kwargs = {}
     if point == "anchor_emit_fail":
-        fn = _anchored_deep
+        fn = ref_fn = _anchored_deep
         args = args + (rng.standard_normal((256, 64)).astype(np.float32),
                        rng.standard_normal((32, 128)).astype(np.float32))
-    ref = fn(*(jnp.asarray(a) for a in args))
+    elif point == "shard_spec_fail":
+        # the sharded emission path needs an *explicit* ShardCtx, which
+        # a (1, 1) host mesh with replicated specs provides on a single
+        # device (explicitness is about specs, not device count).
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import make_test_mesh
+
+        fn, ref_fn = _sharded_deep, _sharded_deep_ref
+        args = (rng.standard_normal((16, 256)).astype(np.float32),)
+        sf_kwargs = {"mesh": make_test_mesh(1), "in_specs": (P(),),
+                     "out_specs": (P(),)}
+    ref = ref_fn(*(jnp.asarray(a) for a in args))
     autotune = knobs.get("REPRO_AUTOTUNE") == "force"
     sf = StitchedFunction(fn, plan_cache=str(tmp_path),
-                          autotune=autotune)
+                          autotune=autotune, **sf_kwargs)
     out = sf(*args)
     out2 = sf(*args)                       # recovery path runs clean too
     rep = sf.reports()[0]
@@ -143,5 +181,14 @@ def test_fault_matrix_pipeline_completes_correctly(point, monkeypatch,
         assert rep.caps_hit.get("race_timeout") == 1
     elif point == "race_crash":
         assert not rep.quarantined                 # race survived the crash
+    elif point == "shard_spec_fail":
+        # the faulted group fell down the ladder; the sibling group on
+        # the other side of the psum boundary kept its stitched kernel
+        # (exactly one fallback among >= 2 groups), and the degraded
+        # sharded compile was never persisted.
+        assert rep.sharded and rep.n_collective >= 1
+        assert rep.n_groups >= 2
+        assert len(rep.fallbacks) == 1
+        assert PlanCache(str(tmp_path)).load(rep.signature) is None
 
     faults.reset("")  # disarm: later tests must not inherit the spec
