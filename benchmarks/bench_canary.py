@@ -1,0 +1,170 @@
+"""Canary-loop cost and lifecycle: live shadow verification must fit
+its budget, and the quarantine -> probation -> re-admission cycle must
+close under fault pressure without ever serving a wrong answer.
+
+Two legs:
+
+* **happy path** -- a few hundred clean serves with the production
+  knobs (sample every 16th call, 2% overhead budget).  The leaky
+  bucket must shed sampled verifies (``skipped_budget`` > 0 proves the
+  governor engaged) and the *governed* verification overhead must land
+  near the budget.  On this host one verify costs several serves, so
+  the budget is only enforceable at one-verify granularity: the bucket
+  can overshoot zero by at most the verify it just afforded, and the
+  assertion bounds the overhead by budget + exactly that granularity
+  -- a regression that stops governing fails the suite while the
+  quantization of a short run does not.
+
+* **chaos lifecycle** -- a Zipfian serving mix (three shape buckets,
+  1/rank weights) with ``verify_flake`` injected against the hottest
+  signature.  Every response is checked against the XLA reference; the
+  run must trip quarantine, open probation, and re-admit once the
+  fault clears.
+
+Wall figures are per-dispatch means over the leg (this is a lifecycle
+bench, not a microbenchmark: the paper-metric figure is the overhead
+percentage, not the absolute call time on this CPU host).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import StitchedFunction
+from repro.runtime.canary import HEALTHY, CanaryController
+from repro.testing import faults
+
+from .common import csv_row
+
+#: Budget handed to the happy-path controller (fraction of serve time).
+BUDGET_PCT = 2.0
+
+HAPPY_CALLS = 400
+CHAOS_CALLS = 72
+
+
+def _deep(x, g, b):
+    for _ in range(4):
+        m = jnp.mean(x, axis=-1, keepdims=True)
+        v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+        x = (x - m) * jax.lax.rsqrt(v + 1e-5) * g + b
+        x = jax.nn.gelu(x, approximate=True) + x
+    return x
+
+
+def _args(rng, R, C=512):
+    return (rng.standard_normal((R, C)).astype(np.float32),
+            (np.abs(rng.standard_normal(C)) + 0.5).astype(np.float32),
+            rng.standard_normal(C).astype(np.float32))
+
+
+def _check(out, ref):
+    for got, want in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _happy_path() -> str:
+    rng = np.random.default_rng(7)
+    tmp = tempfile.mkdtemp(prefix="bench_canary_")
+    ctrl = CanaryController(tmp, sample=16, budget=BUDGET_PCT / 100.0)
+    sf = StitchedFunction(_deep, plan_cache=tmp, canary=ctrl)
+    args = _args(rng, 64)
+    sf(*args)                              # compile + first-call verify
+    t0 = time.perf_counter()
+    for _ in range(HAPPY_CALLS):
+        sf(*args)
+    wall = time.perf_counter() - t0
+    overhead = ctrl.overhead_pct
+    # the bucket's worst case: it spends the earned 2% plus at most ONE
+    # verify of overshoot (the allowance check happens before the spend)
+    grain_pct = 100.0 * ctrl._last_verify_s / max(ctrl._serve_total, 1e-9)
+    bound = BUDGET_PCT + grain_pct + 0.5
+    assert ctrl.stats.mismatches == 0
+    assert ctrl.stats.verified >= 1
+    assert ctrl.stats.skipped_budget >= 1, (
+        "the budget governor never engaged: every sampled verify ran, "
+        "so the leaky bucket is not limiting anything")
+    assert overhead < bound, (
+        f"governed canary overhead {overhead:.2f}% exceeds the "
+        f"{BUDGET_PCT:g}% budget plus one-verify granularity "
+        f"({grain_pct:.2f}%): the leaky bucket stopped governing")
+    return csv_row(
+        "canary_happy_path", wall / HAPPY_CALLS * 1e6,
+        f"{HAPPY_CALLS} clean serves, sample=16 budget={BUDGET_PCT:g}pct; "
+        f"verified={ctrl.stats.verified} "
+        f"skipped={ctrl.stats.skipped_budget} "
+        f"overhead={overhead:.3f}pct grain={grain_pct:.3f}pct "
+        f"total={ctrl.overhead_total_pct:.3f}pct")
+
+
+def _chaos_lifecycle() -> str:
+    rng = np.random.default_rng(0)
+    tmp = tempfile.mkdtemp(prefix="bench_canary_chaos_")
+    ctrl = CanaryController(tmp, sample=1, window=4, threshold=0.5,
+                            probation=2, burnin=2, budget=10.0)
+    sf = StitchedFunction(_deep, plan_cache=tmp, canary=ctrl)
+
+    # Zipfian bucket mix: rank-r bucket served with weight 1/r.
+    rows = (16, 32, 64)
+    weights = np.array([1.0 / (r + 1) for r in range(len(rows))])
+    weights /= weights.sum()
+    per_bucket = {R: _args(rng, R) for R in rows}
+    refs = {R: _deep(*(jnp.asarray(a) for a in per_bucket[R]))
+            for R in rows}
+    hot = rows[0]
+    hot_sig = sf.report(*per_bucket[hot]).signature
+
+    draws = rng.choice(len(rows), size=CHAOS_CALLS, p=weights)
+    t0 = time.perf_counter()
+    with faults.inject(f"verify_flake:times=4,signature={hot_sig}"):
+        for d in draws:
+            R = rows[d]
+            _check(sf(*per_bucket[R]), refs[R])   # never a wrong answer
+    # fault cleared: drive the hot signature back to health
+    recovery = 0
+    while ctrl.state_of(hot_sig) != HEALTHY and recovery < 32:
+        _check(sf(*per_bucket[hot]), refs[hot])
+        recovery += 1
+    wall = time.perf_counter() - t0
+
+    s = ctrl.stats
+    assert s.quarantines >= 1, "the flake never tripped quarantine"
+    assert s.probations >= 1, "quarantine never opened probation"
+    assert s.readmits >= 1, "probation never re-admitted the signature"
+    assert s.mismatches >= 2
+    assert ctrl.state_of(hot_sig) == HEALTHY, (
+        f"hot signature never recovered: {ctrl.state_of(hot_sig)}")
+    calls = CHAOS_CALLS + recovery
+    return csv_row(
+        "canary_chaos_lifecycle", wall / calls * 1e6,
+        f"{calls} Zipfian serves over {len(rows)} buckets, 4 flakes on "
+        f"the hot signature; mismatches={s.mismatches} "
+        f"quarantines={s.quarantines} probations={s.probations} "
+        f"readmits={s.readmits} baseline_serves={s.baseline_serves} "
+        f"recovered=healthy")
+
+
+def run() -> list[str]:
+    return [_happy_path(), _chaos_lifecycle()]
+
+
+if __name__ == "__main__":
+    import argparse
+    import json as _json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT.json")
+    args = ap.parse_args()
+    rows = run()
+    for r in rows:
+        print(r)
+    if args.json:
+        with open(args.json, "w") as f:
+            _json.dump({"schema": 1, "suite": "canary",
+                        "budget_pct": BUDGET_PCT, "rows": rows}, f, indent=1)

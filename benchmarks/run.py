@@ -59,12 +59,13 @@ def main() -> None:
                     choices=["fig1", "table2", "fig7", "overhead", "roofline",
                              "plan_time", "stitch_groups", "beam_stitch",
                              "topk_tune", "recompute", "serving",
-                             "guard_overhead", "anchor", "spmd_stitch"])
+                             "guard_overhead", "anchor", "spmd_stitch",
+                             "canary"])
     ap.add_argument("--json", default=None, metavar="OUT.json",
                     help="also write structured per-row records")
     args = ap.parse_args()
 
-    from . import (bench_anchor_fusion, bench_beam_stitch,
+    from . import (bench_anchor_fusion, bench_beam_stitch, bench_canary,
                    bench_fig1_layernorm, bench_fig7_speedup,
                    bench_guard_overhead, bench_overhead, bench_plan_time,
                    bench_recompute, bench_serving, bench_spmd_stitch,
@@ -86,6 +87,7 @@ def main() -> None:
         "guard_overhead": bench_guard_overhead.run,
         "anchor": bench_anchor_fusion.run,
         "spmd_stitch": bench_spmd_stitch.run,
+        "canary": bench_canary.run,
     }
     selected = [args.only] if args.only else list(suites)
 

@@ -473,6 +473,8 @@ class PlanCache:
         #: signatures condemned by shadow verification: loads miss,
         #: stores refuse.  Shared across processes via the cache dir.
         self.poison = PoisonList(root)
+        #: signatures whose poison pin was lifted by canary probation.
+        self.readmitted = 0
 
     @classmethod
     def from_env(cls) -> "PlanCache | None":
@@ -482,7 +484,8 @@ class PlanCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "quarantined": self.quarantined,
-                "poisoned": len(self.poison)}
+                "poisoned": len(self.poison),
+                "readmitted": self.readmitted}
 
     def _path(self, signature: str) -> str:
         return os.path.join(self.root, f"{signature}.json")
@@ -558,6 +561,14 @@ class PlanCache:
             return  # a read-only cache dir must never break compilation
         self._evict()
 
+    def readmit(self, signature: str) -> bool:
+        """Lift a signature's poison pin (canary probation passed: the
+        plan may be served stitched and re-persisted again).  True iff
+        a pin was actually removed."""
+        ok = self.poison.unpin(signature)
+        self.readmitted += int(ok)
+        return ok
+
     def evict_entry(self, signature: str) -> bool:
         """Drop one entry (quarantine flow: the plan failed shadow
         verification and must not be served to any later process)."""
@@ -585,8 +596,11 @@ class PlanCache:
             now = time.time()
             aged: list[tuple[float, str]] = []
             for name in os.listdir(self.root):
+                # "health.json" is PlanHealth.FILENAME (runtime.canary);
+                # named literally so core stays import-free of the
+                # canary layer.  Neither sidecar is an LRU victim.
                 if not name.endswith(".json") \
-                        or name == PoisonList.FILENAME:
+                        or name in (PoisonList.FILENAME, "health.json"):
                     continue
                 path = os.path.join(self.root, name)
                 try:

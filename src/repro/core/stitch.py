@@ -48,9 +48,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.canary import CanaryController
 from repro.runtime.guard import EmitError, GuardError, PoisonList, \
     RUNG_ANCHORED, RUNG_BASELINE, RUNG_PATTERNS, RUNG_STITCHED, RUNGS, \
-    VerifyPolicy, outputs_mismatch
+    VerifyMismatchError, VerifyPolicy, outputs_mismatch
 from repro.testing import faults as _faults
 
 from .codegen import Emitted, emit_group, emit_pattern
@@ -152,7 +153,8 @@ class _Compiled:
                  donate_argnums: tuple[int, ...] | None = None,
                  verify_policy: VerifyPolicy | None = None,
                  on_quarantine: Callable | None = None,
-                 shard=None):
+                 shard=None, canary=None,
+                 on_readmit: Callable | None = None):
         self.graph = graph
         self.plan = plan
         self.emitted = emitted
@@ -170,6 +172,14 @@ class _Compiled:
         self.call_count = 0           # __call__ invocations (verify sampling)
         self.verify_policy = verify_policy or VerifyPolicy("off")
         self.on_quarantine = on_quarantine
+        #: production canary loop: when a ``CanaryController`` is
+        #: attached, it governs dispatch per call (sampled shadow
+        #: verification, quarantine/probation routing) and ``__call__``
+        #: defers to it; ``on_readmit`` lets the owner lift the poison
+        #: pin and re-persist the plan when probation passes.
+        self.canary = canary
+        self.on_readmit = on_readmit
+        self._canary_prev_rung = None  # rung to restore on re-admission
         self._use_baseline = False    # quarantined / poisoned: baseline rung
         self._baseline_fn = None      # lazily jitted XLA reference
         self._race_ctx: "_RaceContext | None" = None
@@ -264,6 +274,10 @@ class _Compiled:
                                                 list(flat_out))
         if self._use_baseline:
             flat_out = self._baseline(*flat_args)
+            return jax.tree_util.tree_unflatten(self.out_tree,
+                                                list(flat_out))
+        if self.canary is not None:
+            flat_out = self.canary.guarded_call(self, flat_args)
             return jax.tree_util.tree_unflatten(self.out_tree,
                                                 list(flat_out))
         policy = self.verify_policy
@@ -521,7 +535,7 @@ class StitchedFunction:
                  donate_argnums: tuple[int, ...] | None = None,
                  background: Any = None,
                  mesh: Any = None, in_specs: Any = None,
-                 out_specs: Any = None):
+                 out_specs: Any = None, canary: Any = None):
         if dispatch not in ("single", "interpret"):
             raise ValueError(
                 f"dispatch must be 'single' or 'interpret', got {dispatch!r}")
@@ -566,6 +580,15 @@ class StitchedFunction:
         #: baseline rung until the pin is lifted.
         self._poison = (self._plan_cache.poison
                         if self._plan_cache is not None else PoisonList())
+        #: production canary loop: pass a ``CanaryController`` to share
+        #: one (and its overhead budget) across dispatch paths, or let
+        #: ``$REPRO_CANARY`` auto-create one rooted beside the plan
+        #: cache; ``canary=False`` suppresses even the env auto-create
+        #: (differentiable backward).  Off = dispatch byte-identical to
+        #: the pre-canary path.
+        self._canary = (None if canary is False
+                        else canary if canary is not None
+                        else CanaryController.from_env(self._plan_cache))
         self._cache: dict[tuple, _Compiled] = {}
         self._compile_lock = threading.Lock()
         self._swap_lock = threading.Lock()
@@ -1084,7 +1107,16 @@ class StitchedFunction:
                                  and (not groups_from_cache or tuned_fresh
                                       or (entry or {}).get("format")
                                       != entry_format_for(groups, shard)))
-        if store_fresh or store_groups_backfill:
+        #: the clean entry payload, kept (not only stored) so canary
+        #: re-admission can re-persist the plan after a quarantine
+        #: evicted it -- including the restart case, where the compile
+        #: itself saw a poisoned signature and the store was refused.
+        entry_payload = None
+        build_payload = store_fresh or store_groups_backfill or (
+            self._canary is not None and poisoned
+            and self._plan_cache is not None and self._stitch_groups
+            and not fallbacks and not shard_off)
+        if build_payload:
             em_of_pattern = {em.parts[0]: em for em in emitted
                              if len(em.parts) == 1}
             schedules = []
@@ -1116,11 +1148,16 @@ class StitchedFunction:
             if self._stitch_groups:
                 store_source = ("model" if partition_source == "analytic"
                                 else partition_source)
-            self._plan_cache.store(
-                sig, plan_to_entry(plan, schedules, sig, groups=groups_arg,
-                                   group_schedules=group_scheds,
-                                   partition_source=store_source,
-                                   shard=shard))
+            entry_payload = plan_to_entry(plan, schedules, sig,
+                                          groups=groups_arg,
+                                          group_schedules=group_scheds,
+                                          partition_source=store_source,
+                                          shard=shard)
+            if store_fresh or store_groups_backfill:
+                self._plan_cache.store(sig, dict(entry_payload))
+        if entry_payload is None and entry:
+            entry_payload = {k: v for k, v in entry.items()
+                             if k != "checksum"}
         plan_time = time.perf_counter() - t0
 
         stats = plan_stats(graph, plan, ctx=ctx, groups=groups)
@@ -1177,14 +1214,27 @@ class StitchedFunction:
                 self._plan_cache.evict_entry(_sig)
             self._poison.pin(_sig, RUNG_BASELINE, reason)
 
+        def _on_readmit(_sig=sig, _payload=entry_payload) -> None:
+            # canary probation passed: lift the poison pin so the
+            # signature serves stitched again and, when a clean plan
+            # payload is in hand, re-persist it (the quarantine evicted
+            # the on-disk entry).
+            if self._plan_cache is not None:
+                self._plan_cache.readmit(_sig)
+                if _payload:
+                    self._plan_cache.store(_sig, dict(_payload))
+            else:
+                self._poison.unpin(_sig)
+
         compiled = _Compiled(graph, plan, emitted, schedule, report,
                              out_tree, dispatch=self._dispatch,
                              donate=self._donate,
                              donate_argnums=self._donate_argnums,
                              verify_policy=VerifyPolicy.from_env(),
                              on_quarantine=_on_quarantine,
-                             shard=shard)
-        if poisoned:
+                             shard=shard, canary=self._canary,
+                             on_readmit=_on_readmit)
+        if poisoned and self._canary is None:
             compiled.pin_baseline(
                 "signature poisoned: "
                 + (self._poison.reason_for(sig) or "unspecified"))
@@ -1194,8 +1244,17 @@ class StitchedFunction:
             # XLA baseline rung.
             compiled.pin_baseline(
                 "sharded stitching disabled (REPRO_SHARD=0)")
-        else:
+        elif not poisoned:
             compiled._race_ctx = race_ctx
+        # with a canary attached a poisoned signature is NOT hard-pinned:
+        # register() adopts it as quarantined and the per-call governor
+        # serves the baseline until probation re-admits it.
+        if self._canary is not None and not shard_off:
+            self._canary.register(
+                sig,
+                poisoned_reason=((self._poison.reason_for(sig) or "poisoned")
+                                 if poisoned else None),
+                rung=report.rung)
         return compiled
 
     def rerace(self, key: tuple) -> str | None:
@@ -1249,11 +1308,29 @@ class StitchedFunction:
             partition_candidates=len(rc.candidates),
             tune_groups=True, t0=t0, out_tree=rc.out_tree, race_ctx=None,
             shard=rc.shard)
+        if _faults.fire("swap_crash", signature=rc.sig) is not None:
+            raise GuardError("injected swap_crash: hot-swap commit failed")
+        if self._canary is not None:
+            # a measured rebuild must prove itself before it serves: N
+            # verified calls on synthesized inputs.  Failure refuses the
+            # swap and evicts the just-stored measured entry -- but does
+            # NOT poison the signature: the live analytic plan is fine.
+            ok, why = self._canary.burn_in(new)
+            if not ok:
+                if self._plan_cache is not None:
+                    self._plan_cache.evict_entry(rc.sig)
+                raise VerifyMismatchError(
+                    f"measured plan failed canary burn-in: {why}")
         with self._swap_lock:
             if self._cache.get(key) is not compiled:
                 return None  # superseded: a newer swap already won
             if compiled._use_baseline:
                 return None  # quarantined mid-race: keep the baseline pin
+            if self._poison.rung_for(rc.sig) is not None:
+                return None  # canary quarantined mid-race: its _trip
+                #              pinned the poison list synchronously, so
+                #              this re-check closes the swap-vs-
+                #              quarantine race
             self._cache[key] = new
         return partition_source
 
@@ -1293,7 +1370,8 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                  background: Any = None,
                  mesh: Any = None,
                  in_specs: Any = None,
-                 out_specs: Any = None) -> Callable:
+                 out_specs: Any = None,
+                 canary: Any = None) -> Callable:
     """Wrap ``fn`` with the FusionStitching trace->plan->stitch->emit
     pipeline.
 
@@ -1323,6 +1401,14 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
     are the primal inputs, matching the paper's training support where the
     backward graph is just another fusion-planned graph).
 
+    ``canary`` takes a ``repro.runtime.CanaryController`` (or
+    ``$REPRO_CANARY=1`` auto-creates one rooted beside the plan cache):
+    live dispatches are sampled through the shadow-verification
+    reference under a hard overhead budget, and per-signature health
+    (healthy -> quarantined -> probation -> re-admitted) persists
+    beside the poison list.  The forward path only -- a differentiable
+    wrapper's backward runs un-canaried.
+
     ``mesh`` + ``in_specs``/``out_specs`` plan one stitched schedule
     against the *per-shard* shapes of ``fn`` (treated as the per-shard
     body, shard_map-style) and replay it on every shard via
@@ -1345,7 +1431,7 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                                           if not differentiable else None),
                           background=background,
                           mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs)
+                          out_specs=out_specs, canary=canary)
     if not differentiable:
         return sf
 
@@ -1370,7 +1456,7 @@ def stitched_jit(fn: Callable, *, hw: Hardware = V5E, interpret: bool = True,
                 vjp_fn, hw=hw, interpret=interpret,
                 use_remote_fusion=use_remote_fusion, dispatch=dispatch,
                 plan_cache=plan_cache, autotune=autotune,
-                stitch_groups=stitch_groups)
+                stitch_groups=stitch_groups, canary=False)
         return bwd_cache[key](cts, *args)
 
     wrapped.defvjp(fwd, bwd)

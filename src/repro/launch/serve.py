@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config
 from repro.core.stitch import stitched_jit
 from repro.models import build_model
+from repro.runtime.canary import CanaryController
 from repro.serving.buckets import Buckets, pad_tokens
 
 #: per-process dispatch table: (model identity, stitched, plan_cache)
@@ -53,8 +54,13 @@ def _dispatch_for(mdl, stitched: bool, plan_cache: str | None = None):
         return mdl.decode_step(p, c, t, pos, kv_len=pos + 1)
 
     if stitched:
-        pair = (stitched_jit(prefill_fn, plan_cache=plan_cache),
-                stitched_jit(decode_fn, plan_cache=plan_cache))
+        # one controller for the pair: the canary overhead budget is
+        # per serving process, not per dispatch callable.
+        canary = CanaryController.from_env(plan_cache)
+        pair = (stitched_jit(prefill_fn, plan_cache=plan_cache,
+                             canary=canary),
+                stitched_jit(decode_fn, plan_cache=plan_cache,
+                             canary=canary))
     else:
         pair = (jax.jit(prefill_fn), jax.jit(decode_fn))
     _DISPATCH[key] = (mdl,) + pair

@@ -1,18 +1,22 @@
-"""Runtime containment: fault tolerance for the train loop and the
-guard layer (error taxonomy, fallback ladder, shadow verification,
-poison list, watchdog, retry/circuit-breaker) for the compiler and
-serving path."""
+"""Runtime containment: fault tolerance for the train loop, the guard
+layer (error taxonomy, fallback ladder, shadow verification, poison
+list, watchdog, retry/circuit-breaker) for the compiler and serving
+path, and the production canary loop (live-traffic shadow sampling +
+persistent plan-health state machine) on top of both."""
 from .guard import (CacheCorruptError, CircuitBreaker, EmitError,
                     FallbackRecord, GuardError, PoisonList, RaceTimeoutError,
                     RetryPolicy, RUNG_ANCHORED, RUNG_BASELINE, RUNG_PATTERNS,
                     RUNG_STITCHED,
                     RUNGS, VerifyMismatchError, VerifyPolicy,
                     outputs_mismatch, race_timeout_s, with_watchdog)
-from .fault_tolerance import RestartableLoop, StragglerMonitor
+from .canary import CanaryController, CanaryStats, PlanHealth
+from .fault_tolerance import LoopStats, RestartableLoop, StragglerMonitor
 
 __all__ = [
-    "CacheCorruptError", "CircuitBreaker", "EmitError", "FallbackRecord",
-    "GuardError", "PoisonList", "RaceTimeoutError", "RestartableLoop",
+    "CacheCorruptError", "CanaryController", "CanaryStats", "CircuitBreaker",
+    "EmitError", "FallbackRecord",
+    "GuardError", "LoopStats", "PlanHealth", "PoisonList",
+    "RaceTimeoutError", "RestartableLoop",
     "RetryPolicy", "RUNG_ANCHORED", "RUNG_BASELINE", "RUNG_PATTERNS",
     "RUNG_STITCHED",
     "RUNGS", "StragglerMonitor", "VerifyMismatchError", "VerifyPolicy",

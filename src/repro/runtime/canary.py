@@ -1,0 +1,639 @@
+"""Production canary loop: plan health as a persistent state machine.
+
+The paper's deployment claim (4+ months unattended, ~30k tasks/month)
+needs more than fail-safe *compilation*: a silently-wrong plan must be
+caught on live traffic, retired, and -- crucially -- given a way back
+once the underlying cause (a flaky device, a since-fixed compiler bug)
+clears.  This module closes that loop over the guard primitives:
+
+* **CanaryController** samples live ``StitchedFunction`` /
+  ``ContinuousBatcher`` dispatches through the shadow-verification
+  reference (the same ``outputs_mismatch`` comparison ``REPRO_VERIFY``
+  uses), tracks per-signature mismatch rates over a sliding window, and
+  keeps the verification cost under a hard overhead budget
+  (``REPRO_CANARY_BUDGET``, default 2% of serve time) with a leaky
+  bucket: serves earn allowance, verifies spend it, and a sampled
+  verify that cannot be afforded is skipped and counted.
+
+* **PlanHealth** persists the per-signature state machine beside
+  ``poison.json`` as a checksummed, atomically-rewritten
+  ``health.json``; a torn or tampered file is moved aside and rebuilt
+  (mirroring the plan cache's torn-entry quarantine), so the state
+  machine survives process restarts AND its own corruption.
+
+The state machine generalizes both of the guard layer's blunt
+instruments (in-memory rung degradation, permanent-only poison pins)::
+
+    healthy --(windowed mismatch rate >= threshold, with hysteresis:
+               at least MIN_TRIP_FAILURES failures)--> quarantined
+    quarantined --(REPRO_CANARY_PROBATION clean baseline serves)-->
+               probation
+    probation --(one canaried call at a time; REPRO_CANARY_BURNIN
+               consecutive verified passes)--> healthy (re-admitted:
+               poison pin lifted, plan re-persisted)
+    probation --(one canary mismatch)--> quarantined
+    degraded   -- observability state for compiles that landed below
+               the stitched rung; verified exactly like healthy
+
+Quarantine still pins the poison list and evicts the cache entry (other
+processes sharing the cache dir honor it immediately); re-admission
+lifts the pin and re-stores the plan.  Background-tuned rebuilds must
+additionally pass :meth:`CanaryController.burn_in` -- N verified calls
+on synthesized inputs -- before ``rerace`` commits the hot swap.
+
+Only stdlib + numpy at import time; jax is imported lazily inside
+``burn_in``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.testing import faults as _faults
+
+from .guard import GuardError, RUNG_ANCHORED, RUNG_BASELINE, RUNG_STITCHED, \
+    outputs_mismatch
+
+# ---------------------------------------------------------------------------
+# health states
+# ---------------------------------------------------------------------------
+HEALTHY = "healthy"
+#: Compiled below the stitched rung (emission fallbacks): served and
+#: verified exactly like healthy, recorded for observability.
+DEGRADED = "degraded"
+#: Every call serves the XLA baseline; clean serves count toward
+#: probation.
+QUARANTINED = "quarantined"
+#: Re-admission trial: one canaried (always-verified) call at a time;
+#: concurrent calls keep serving the baseline.
+PROBATION = "probation"
+
+STATES = (HEALTHY, DEGRADED, QUARANTINED, PROBATION)
+
+# ---------------------------------------------------------------------------
+# knobs
+# ---------------------------------------------------------------------------
+#: Master switch: truthy enables the canary loop on every
+#: StitchedFunction / batcher that does not get an explicit controller.
+ENV_CANARY = "REPRO_CANARY"
+
+#: Hard verification budget as a fraction of serve time (leaky bucket).
+ENV_BUDGET = "REPRO_CANARY_BUDGET"
+DEFAULT_BUDGET = 0.02
+
+#: Verify call 0 and every Kth call after it (budget permitting).
+ENV_SAMPLE = "REPRO_CANARY_SAMPLE"
+DEFAULT_SAMPLE = 16
+
+#: Sliding mismatch window length (per signature, in-memory).
+ENV_WINDOW = "REPRO_CANARY_WINDOW"
+DEFAULT_WINDOW = 16
+
+#: Windowed mismatch rate that trips quarantine.
+ENV_THRESHOLD = "REPRO_CANARY_THRESHOLD"
+DEFAULT_THRESHOLD = 0.25
+
+#: Clean baseline serves while quarantined before probation opens.
+ENV_PROBATION = "REPRO_CANARY_PROBATION"
+DEFAULT_PROBATION = 8
+
+#: Consecutive verified passes that re-admit a probationer, and the
+#: burn-in call count a measured rebuild must survive before hot-swap.
+ENV_BURNIN = "REPRO_CANARY_BURNIN"
+DEFAULT_BURNIN = 3
+
+#: Hysteresis: a single mismatch (one cosmic ray, one flaky sample)
+#: never quarantines on its own, no matter how short the window is.
+MIN_TRIP_FAILURES = 2
+
+
+def canary_enabled() -> bool:
+    return os.environ.get(ENV_CANARY, "").strip().lower() in (
+        "1", "on", "true", "yes")
+
+
+def _int_env(env: str, default: int) -> int:
+    try:
+        return int(os.environ.get(env, default))
+    except (TypeError, ValueError):
+        return default
+
+
+def _float_env(env: str, default: float) -> float:
+    try:
+        return float(os.environ.get(env, default))
+    except (TypeError, ValueError):
+        return default
+
+
+# ---------------------------------------------------------------------------
+# persistent per-signature health store
+# ---------------------------------------------------------------------------
+class PlanHealth:
+    """Checksummed, atomically-rewritten ``health.json`` beside
+    ``poison.json``.
+
+    Load validates a sha256 over the canonical body (the plan cache's
+    torn-entry discipline); a torn/tampered/unparseable file is moved
+    aside as ``health.json.corrupt.<ms>`` -- evidence kept, store
+    rebuilt empty -- and ``recovered`` counts it.  Mutations re-read the
+    file first so concurrent processes merge instead of clobber (the
+    PoisonList pattern); the poison list remains the cross-process hard
+    pin, so a rebuilt-empty health store is *recovered* from it (see
+    ``CanaryController.register``).  IO is best-effort: a read-only dir
+    degrades to in-memory state, never an exception on the serving path.
+    """
+
+    FILENAME = "health.json"
+
+    def __init__(self, root: str | None = None):
+        self.root = root
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict] = {}
+        self.recovered = 0
+        self.last_error = ""
+        with self._lock:
+            self._load()
+
+    def _path(self) -> str | None:
+        return os.path.join(self.root, self.FILENAME) if self.root else None
+
+    @staticmethod
+    def _checksum(body: dict) -> str:
+        blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def _load(self) -> None:  # caller holds _lock
+        path = self._path()
+        if path is None:
+            return
+        try:
+            with open(path) as f:
+                raw = f.read()
+        except OSError:  # absent: a fresh store
+            return
+        try:
+            data = json.loads(raw)
+            if not isinstance(data, dict):
+                raise ValueError("health file is not a JSON object")
+            body = {k: v for k, v in data.items() if k != "checksum"}
+            if data.get("checksum") != self._checksum(body):
+                raise ValueError("checksum mismatch (torn or tampered)")
+            entries = body.get("entries")
+            if not isinstance(entries, dict):
+                raise ValueError("health file has no entries object")
+        except (json.JSONDecodeError, ValueError) as e:
+            self._recover(path, e)
+            return
+        for k, v in entries.items():
+            if isinstance(v, dict) and v.get("state") in STATES:
+                self._entries[str(k)] = v
+
+    def _recover(self, path: str, err: Exception) -> None:
+        """Move the corrupt file aside (never delete evidence, never
+        re-fail on every load) and rebuild empty."""
+        self.last_error = f"{type(err).__name__}: {err}"
+        self.recovered += 1
+        try:
+            os.replace(path, f"{path}.corrupt.{int(time.time() * 1e3)}")
+        except OSError:
+            try:  # last resort: a torn file must not shadow the rebuild
+                os.unlink(path)
+            except OSError:
+                pass
+
+    def _save(self) -> None:  # caller holds _lock
+        path = self._path()
+        if path is None:
+            return
+        body = {"format": 1, "entries": self._entries}
+        body["checksum"] = self._checksum(
+            {"format": 1, "entries": self._entries})
+        payload = json.dumps(body, indent=1)
+        if _faults.fire("health_corrupt") is not None:
+            payload = payload[: max(1, len(payload) // 2)]  # torn write
+        try:
+            os.makedirs(self.root, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            os.replace(tmp, path)  # atomic: readers never see half a file
+        except OSError:
+            pass  # read-only dir: in-memory state still governs
+
+    def get(self, signature: str) -> dict | None:
+        with self._lock:
+            e = self._entries.get(signature)
+            return dict(e) if e is not None else None
+
+    def state_of(self, signature: str) -> str:
+        with self._lock:
+            e = self._entries.get(signature)
+            return e.get("state", HEALTHY) if e else HEALTHY
+
+    def update(self, signature: str, **fields) -> dict:
+        with self._lock:
+            self._load()  # merge concurrent writers, don't clobber
+            e = dict(self._entries.get(signature) or {})
+            e.update(fields)
+            e["time"] = time.time()
+            self._entries[signature] = e
+            self._save()
+            return dict(e)
+
+    def __contains__(self, signature: str) -> bool:
+        with self._lock:
+            return signature in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+@dataclass
+class CanaryStats:
+    calls: int = 0              # dispatches routed through the controller
+    verified: int = 0           # ...shadow-verified against the baseline
+    mismatches: int = 0         # ...that diverged (reference was served)
+    skipped_budget: int = 0     # sampled verifies the budget refused
+    baseline_serves: int = 0    # quarantined/probation-overflow serves
+    quarantines: int = 0        # healthy/probation -> quarantined trips
+    probations: int = 0         # quarantined -> probation transitions
+    readmits: int = 0           # probation -> healthy re-admissions
+    burnin_runs: int = 0        # measured-rebuild burn-ins attempted
+    burnin_failures: int = 0    # ...that refused the hot swap
+    hard_failures: int = 0      # stitched dispatches that raised
+
+
+class CanaryController:
+    """Samples live traffic through the shadow reference and drives the
+    persistent per-signature health state machine.
+
+    One controller is shared by every dispatch path of a serving
+    process (prefill + decode of a batcher), so the overhead budget is
+    global: the leaky bucket earns ``budget`` seconds of verification
+    per second of serving, spends it on sampled verifies, and skips
+    (counting ``skipped_budget``) when the bucket is dry.  First-call
+    and probation verifies are budget-exempt -- correctness gates, not
+    samples.  Wall figures are dispatch-side; on asynchronous backends
+    they measure dispatch+sync of the verified calls, which is exactly
+    the cost the budget must bound.
+    """
+
+    def __init__(self, root: str | None = None, *,
+                 sample: int | None = None, window: int | None = None,
+                 threshold: float | None = None,
+                 probation: int | None = None, burnin: int | None = None,
+                 budget: float | None = None):
+        self.sample = max(1, sample if sample is not None
+                          else _int_env(ENV_SAMPLE, DEFAULT_SAMPLE))
+        self.window = max(2, window if window is not None
+                          else _int_env(ENV_WINDOW, DEFAULT_WINDOW))
+        self.threshold = min(1.0, max(0.0, threshold if threshold is not None
+                                      else _float_env(ENV_THRESHOLD,
+                                                      DEFAULT_THRESHOLD)))
+        self.probation = max(1, probation if probation is not None
+                             else _int_env(ENV_PROBATION, DEFAULT_PROBATION))
+        self.burnin = max(0, burnin if burnin is not None
+                          else _int_env(ENV_BURNIN, DEFAULT_BURNIN))
+        self.budget = max(0.0, budget if budget is not None
+                          else _float_env(ENV_BUDGET, DEFAULT_BUDGET))
+        self.health = PlanHealth(root)
+        self.stats = CanaryStats()
+        self._lock = threading.RLock()
+        self._windows: dict[str, deque] = {}
+        self._probation_busy: set[str] = set()
+        self._serve_total = 0.0
+        self._verify_total = 0.0           # every verify (reporting)
+        self._budgeted_verify_total = 0.0  # sampled verifies only
+        self._allowance = 0.0              # leaky bucket, seconds
+        self._last_verify_s = 1e-3
+
+    @classmethod
+    def from_env(cls, root=None) -> "CanaryController | None":
+        """A controller iff ``$REPRO_CANARY`` is truthy.  ``root`` may
+        be a directory path or a ``PlanCache`` (its root is used)."""
+        if not canary_enabled():
+            return None
+        return cls(getattr(root, "root", root))
+
+    # -- overhead accounting -------------------------------------------------
+    @property
+    def overhead_pct(self) -> float:
+        """Budget-governed verification cost over serve cost, percent.
+        This is the figure the leaky bucket bounds; mandatory verifies
+        (first-call, probation) are reported separately in
+        :attr:`overhead_total_pct`."""
+        with self._lock:
+            if self._serve_total <= 0.0:
+                return 0.0
+            return 100.0 * self._budgeted_verify_total / self._serve_total
+
+    @property
+    def overhead_total_pct(self) -> float:
+        with self._lock:
+            if self._serve_total <= 0.0:
+                return 0.0
+            return 100.0 * self._verify_total / self._serve_total
+
+    def _account(self, serve_dt: float, verify_dt: float, *,
+                 exempt: bool) -> None:
+        with self._lock:
+            self._serve_total += serve_dt
+            self._verify_total += verify_dt
+            # the bucket bursts at most a few verifies deep: a long idle
+            # stretch must not bank enough allowance to verify every
+            # call of the next wave.
+            cap = max(4.0 * max(self._last_verify_s, verify_dt), 1e-3)
+            self._allowance = min(self._allowance + serve_dt * self.budget,
+                                  cap)
+            if verify_dt > 0.0:
+                self._last_verify_s = verify_dt
+                if not exempt:
+                    self._budgeted_verify_total += verify_dt
+                    self._allowance -= verify_dt
+
+    # -- registration --------------------------------------------------------
+    def register(self, signature: str, *, poisoned_reason: str | None = None,
+                 rung: str | None = None) -> str:
+        """Adopt a freshly compiled signature into the health store and
+        return its state.  An existing entry wins (restart persistence).
+        A poison pin with *no* entry means the health file was lost or
+        torn after a quarantine: the pin is the redundant record, so the
+        signature is re-adopted as QUARANTINED and probation can still
+        lift it."""
+        entry = self.health.get(signature)
+        if entry is not None:
+            with self._lock:
+                self._windows.setdefault(signature,
+                                         deque(maxlen=self.window))
+            return entry.get("state", HEALTHY)
+        with self._lock:
+            self._windows.setdefault(signature, deque(maxlen=self.window))
+        if poisoned_reason:
+            self.health.update(signature, state=QUARANTINED,
+                               reason=poisoned_reason, quarantines=1,
+                               baseline_serves=0, probation_clean=0)
+            return QUARANTINED
+        if rung is not None and rung not in (RUNG_ANCHORED, RUNG_STITCHED):
+            self.health.update(signature, state=DEGRADED, rung=rung)
+            return DEGRADED
+        self.health.update(signature, state=HEALTHY)
+        return HEALTHY
+
+    def state_of(self, signature: str) -> str:
+        return self.health.state_of(signature)
+
+    # -- the guarded dispatch ------------------------------------------------
+    def guarded_call(self, compiled, flat_args) -> tuple:
+        """Route one dispatch of ``compiled`` (a ``_Compiled``) through
+        the health state machine.  Takes and returns *flat* leaves; the
+        caller owns tree unflattening.  Never raises on a contained
+        failure -- a mismatch serves the reference, a crash trips
+        quarantine and serves the baseline."""
+        sig = compiled.report.signature
+        state = self.health.state_of(sig)
+        with self._lock:
+            self.stats.calls += 1
+        if state == QUARANTINED:
+            out = compiled._baseline(*flat_args)
+            self._note_baseline_serve(sig)
+            return tuple(out)
+        probation = False
+        if state == PROBATION:
+            probation = self._acquire_probation(sig)
+            if not probation:  # one canaried call at a time
+                with self._lock:
+                    self.stats.baseline_serves += 1
+                return tuple(compiled._baseline(*flat_args))
+        try:
+            return self._verified_call(compiled, flat_args,
+                                       probation=probation)
+        finally:
+            if probation:
+                self._release_probation(sig)
+
+    def _verified_call(self, compiled, flat_args, *,
+                       probation: bool) -> tuple:
+        report = compiled.report
+        sig = report.signature
+        idx = compiled.call_count
+        compiled.call_count += 1
+        sampled = idx == 0 or idx % self.sample == 0
+        verify = probation or sampled
+        exempt = probation or idx == 0
+        if verify and not exempt:
+            with self._lock:
+                if self._allowance <= 0.0:
+                    verify = False
+                    self.stats.skipped_budget += 1
+        ref = None
+        verify_dt = 0.0
+        if verify:
+            # the stitched call may donate its inputs: the reference
+            # must consume them first.
+            tv = time.perf_counter()
+            ref = compiled._baseline(*flat_args)
+            verify_dt = time.perf_counter() - tv
+        t0 = time.perf_counter()
+        try:
+            flat_out = compiled._jitted(*flat_args)
+        except Exception as e:  # noqa: BLE001 - contained: quarantine
+            with self._lock:
+                self.stats.hard_failures += 1
+            self._trip(sig, compiled,
+                       f"dispatch failed: {type(e).__name__}: {e}")
+            if ref is None:
+                try:
+                    ref = compiled._baseline(*flat_args)
+                except Exception as e2:  # noqa: BLE001
+                    raise GuardError(
+                        "stitched dispatch failed and the baseline replay "
+                        f"could not run (inputs donated?): {e2}") from e
+            return tuple(ref)
+        serve_dt = time.perf_counter() - t0
+        reason = None
+        if ref is not None:
+            tv = time.perf_counter()
+            report.verified += 1
+            with self._lock:
+                self.stats.verified += 1
+            reason = outputs_mismatch(ref, flat_out,
+                                      anchored=report.n_anchored > 0)
+            if _faults.fire("verify_flake", signature=sig,
+                            seam="serve") is not None:
+                reason = reason or "injected verify_flake"
+            if _faults.fire("numeric_mismatch") is not None:
+                reason = reason or "injected numeric_mismatch"
+            verify_dt += time.perf_counter() - tv
+        self._account(serve_dt, verify_dt, exempt=exempt)
+        if ref is None:
+            return tuple(flat_out)
+        if reason is None:
+            self._record_pass(sig, compiled, probation)
+            return tuple(flat_out)
+        report.verify_failures += 1
+        with self._lock:
+            self.stats.mismatches += 1
+        self._record_fail(sig, compiled, probation, reason)
+        return tuple(ref)  # serve the reference, never the mismatch
+
+    # -- state transitions ---------------------------------------------------
+    def _window(self, sig: str) -> deque:
+        with self._lock:
+            return self._windows.setdefault(sig, deque(maxlen=self.window))
+
+    def _record_pass(self, sig: str, compiled, probation: bool) -> None:
+        if probation:
+            clean = int((self.health.get(sig) or {})
+                        .get("probation_clean", 0)) + 1
+            if clean >= max(1, self.burnin):
+                self._readmit(sig, compiled)
+            else:
+                self.health.update(sig, probation_clean=clean)
+            return
+        self._window(sig).append(True)
+
+    def _record_fail(self, sig: str, compiled, probation: bool,
+                     reason: str) -> None:
+        if probation:  # the probationer mismatched: straight back
+            self._trip(sig, compiled, f"probation canary failed: {reason}")
+            return
+        win = self._window(sig)
+        win.append(False)
+        fails = sum(1 for ok in win if not ok)
+        if fails >= MIN_TRIP_FAILURES \
+                and fails / len(win) >= self.threshold:
+            self._trip(sig, compiled,
+                       f"canary mismatch rate {fails}/{len(win)}: {reason}")
+
+    def _note_baseline_serve(self, sig: str) -> None:
+        with self._lock:
+            self.stats.baseline_serves += 1
+        n = int((self.health.get(sig) or {}).get("baseline_serves", 0)) + 1
+        if n >= self.probation:
+            with self._lock:
+                self.stats.probations += 1
+            self.health.update(sig, state=PROBATION, baseline_serves=n,
+                               probation_clean=0)
+        else:
+            self.health.update(sig, baseline_serves=n)
+
+    def _trip(self, sig: str, compiled, reason: str) -> None:
+        """healthy/probation -> quarantined.  Pins the poison list and
+        evicts the cache entry via ``on_quarantine`` but does NOT set
+        ``_use_baseline``: the controller governs per call, which is
+        what makes probation possible later."""
+        with self._lock:
+            self.stats.quarantines += 1
+            self._windows.pop(sig, None)  # hysteresis: a re-admitted
+            #                               plan starts a fresh window
+        report = compiled.report
+        if getattr(compiled, "_canary_prev_rung", None) is None:
+            compiled._canary_prev_rung = report.rung
+        self.health.update(
+            sig, state=QUARANTINED, reason=reason,
+            quarantines=int((self.health.get(sig) or {})
+                            .get("quarantines", 0)) + 1,
+            baseline_serves=0, probation_clean=0)
+        report.quarantined = True
+        report.rung = RUNG_BASELINE
+        report.fallbacks.append((-1, RUNG_BASELINE, reason))
+        if compiled.on_quarantine is not None:
+            try:
+                compiled.on_quarantine(reason)
+            except Exception:  # noqa: BLE001 - eviction failure must not
+                pass           # take down the already-degraded dispatch
+
+    def _readmit(self, sig: str, compiled) -> None:
+        """probation -> healthy: lift the pin, restore the rung, tell
+        the owner to re-persist the plan."""
+        with self._lock:
+            self.stats.readmits += 1
+            self._windows.pop(sig, None)
+        self.health.update(
+            sig, state=HEALTHY, baseline_serves=0, probation_clean=0,
+            readmits=int((self.health.get(sig) or {})
+                         .get("readmits", 0)) + 1)
+        report = compiled.report
+        report.quarantined = False
+        prev = getattr(compiled, "_canary_prev_rung", None)
+        report.rung = prev if prev is not None else RUNG_STITCHED
+        compiled._canary_prev_rung = None
+        report.fallbacks.append(
+            (-1, report.rung, "probation passed: re-admitted"))
+        if compiled.on_readmit is not None:
+            try:
+                compiled.on_readmit()
+            except Exception:  # noqa: BLE001 - a failed re-store leaves
+                pass           # the pin lifted in memory; never raises
+
+    # -- probation single-flight ---------------------------------------------
+    def _acquire_probation(self, sig: str) -> bool:
+        with self._lock:
+            if sig in self._probation_busy:
+                return False
+            self._probation_busy.add(sig)
+            return True
+
+    def _release_probation(self, sig: str) -> None:
+        with self._lock:
+            self._probation_busy.discard(sig)
+
+    # -- measured-rebuild burn-in --------------------------------------------
+    def burn_in(self, compiled) -> tuple[bool, str]:
+        """Run ``burnin`` verified calls of ``compiled`` on synthesized
+        inputs (fresh arrays per call: the stitched dispatch donates)
+        and compare each against the baseline.  (ok, reason) -- callers
+        refuse the hot swap on failure."""
+        if self.burnin <= 0:
+            return True, ""
+        import jax.numpy as jnp
+
+        graph = compiled.graph
+        sig = compiled.report.signature
+        anchored = compiled.report.n_anchored > 0
+        with self._lock:
+            self.stats.burnin_runs += 1
+        rng = np.random.default_rng(0)
+
+        def _arg_pair():
+            """Two device copies of ONE host draw: the stitched dispatch
+            may donate its copy, and the pair must be value-identical."""
+            a, b = [], []
+            for i in graph.inputs:
+                spec = graph.node(i).spec
+                host = rng.standard_normal(spec.shape)
+                a.append(jnp.asarray(host, dtype=spec.dtype))
+                b.append(jnp.asarray(host, dtype=spec.dtype))
+            return a, b
+
+        for call in range(self.burnin):
+            reason = None
+            try:
+                ref_args, got_args = _arg_pair()
+                ref = compiled._baseline(*ref_args)
+                got = compiled._jitted(*got_args)
+                reason = outputs_mismatch(ref, got, anchored=anchored)
+            except Exception as e:  # noqa: BLE001 - a crash refuses too
+                reason = f"burn-in execution failed: {type(e).__name__}: {e}"
+            if reason is None and _faults.fire(
+                    "verify_flake", signature=sig,
+                    seam="burn_in") is not None:
+                reason = "injected verify_flake"
+            if reason is not None:
+                with self._lock:
+                    self.stats.burnin_failures += 1
+                return False, f"burn-in call {call}: {reason}"
+        return True, ""

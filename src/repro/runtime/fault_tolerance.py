@@ -50,6 +50,23 @@ class StragglerMonitor:
 
 
 @dataclass
+class LoopStats:
+    """What ``run_with_restarts`` survived: fleet telemetry in one spot.
+
+    ``restarts`` counts every contained crash; ``budget_resets`` counts
+    the times forward progress (a later checkpoint reached) refilled
+    the retry budget; ``last_resume`` is the final restore point;
+    ``flagged_steps`` carries the straggler monitor's verdicts from the
+    successful run.
+    """
+
+    restarts: int = 0
+    budget_resets: int = 0
+    last_resume: int = 0
+    flagged_steps: list[int] = field(default_factory=list)
+
+
+@dataclass
 class RestartableLoop:
     """Checkpoint/restart driver: resumable, failure-injectable.
 
@@ -117,22 +134,38 @@ class RestartableLoop:
         point fails ``max_restarts`` consecutive times the loop stops
         retrying and raises :class:`GuardError` with the original
         failure chained, instead of crash-looping on a failure no
-        restart can fix.  ``on_restart(attempt, exc)`` observes each
-        restart (tests, fleet telemetry).
+        restart can fix.  The budget is per resume point, not per job:
+        a restart that makes forward progress (the resume step
+        advanced) refills it, so a long job with occasional unrelated
+        crashes is not killed by their total count.  ``on_restart
+        (attempt, exc)`` observes each restart (tests, fleet
+        telemetry).  Returns ``(state, LoopStats)``.
         """
         retry = retry or RetryPolicy(max_retries=max_restarts)
         breaker = CircuitBreaker(threshold=max_restarts)
         attempt = 0
+        stats = LoopStats()
+        prev_resume: int | None = None
         # consume the injected failure only on the first attempt: the
         # restart must demonstrate recovery, not re-trip the fault.
         inject = fail_at
         while True:
             resume = ckpt.latest_step(self.directory) or 0
+            if prev_resume is not None and resume > prev_resume:
+                # forward progress: this crash is not the last one
+                # repeating -- refill the retry budget.
+                attempt = 0
+                stats.budget_resets += 1
+            prev_resume = resume
+            stats.last_resume = resume
             try:
-                return self.run(state, data, step_fn, n_steps,
-                                fail_at=inject, on_step=on_step)
+                state_out, monitor = self.run(state, data, step_fn, n_steps,
+                                              fail_at=inject, on_step=on_step)
+                stats.flagged_steps = list(monitor.flagged_steps)
+                return state_out, stats
             except Exception as e:  # noqa: BLE001 - contained below
                 inject = None
+                stats.restarts += 1
                 if breaker.record_failure(resume) \
                         or attempt >= max_restarts:
                     raise GuardError(

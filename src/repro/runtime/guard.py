@@ -336,12 +336,27 @@ class PoisonList:
     cache dir); without it the list is in-memory only.  File IO is
     best-effort: a read-only dir degrades to in-memory pinning, never
     to an exception on the serving path.
+
+    The list is bounded (``max_entries`` / ``$REPRO_POISON_MAX``,
+    oldest pin evicted first) and pins are no longer permanent:
+    ``unpin`` lifts one, which is how the canary loop's probation
+    re-admits a signature whose fault has cleared.
     """
 
     FILENAME = "poison.json"
+    ENV_MAX = "REPRO_POISON_MAX"
+    DEFAULT_MAX = 256
 
-    def __init__(self, root: str | None = None):
+    def __init__(self, root: str | None = None,
+                 max_entries: int | None = None):
         self.root = root
+        if max_entries is None:
+            try:
+                max_entries = int(os.environ.get(self.ENV_MAX,
+                                                 self.DEFAULT_MAX))
+            except (TypeError, ValueError):
+                max_entries = self.DEFAULT_MAX
+        self.max_entries = max(1, max_entries)
         self._lock = threading.Lock()
         self._entries: dict[str, dict] = {}
         self._load()
@@ -387,7 +402,24 @@ class PoisonList:
             self._load()
             self._entries[signature] = {"rung": rung, "reason": reason,
                                         "time": time.time()}
+            while len(self._entries) > self.max_entries:
+                # evict the oldest pin, never the one just added
+                # (insertion order breaks timestamp ties)
+                oldest = min(
+                    (k for k in self._entries if k != signature),
+                    key=lambda k: self._entries[k].get("time", 0.0))
+                del self._entries[oldest]
             self._save()
+
+    def unpin(self, signature: str) -> bool:
+        """Lift a pin (probation passed: the signature may be served
+        stitched and re-persisted again).  True iff it was pinned."""
+        with self._lock:
+            self._load()  # merge concurrent pinners before rewriting
+            removed = self._entries.pop(signature, None) is not None
+            if removed:
+                self._save()
+            return removed
 
     def rung_for(self, signature: str) -> str | None:
         with self._lock:

@@ -34,7 +34,7 @@ import queue
 from dataclasses import dataclass, field
 
 from repro.runtime.guard import CircuitBreaker, RaceTimeoutError, \
-    RetryPolicy, with_watchdog
+    RetryPolicy, VerifyMismatchError, with_watchdog
 
 _STOP = object()
 
@@ -155,10 +155,12 @@ class BackgroundTuner:
                     if key is not None:
                         self.breaker.record_success(key)
                     break
-                except RaceTimeoutError as e:
+                except (RaceTimeoutError, VerifyMismatchError) as e:
                     # a hung attempt left its thread behind: retrying
-                    # would stack another one on a busy device -- record
-                    # and move on.
+                    # would stack another one on a busy device.  A
+                    # canary burn-in refusal is deterministic for the
+                    # same rebuild: re-running burns device time for
+                    # the same verdict.  Record and move on.
                     error = f"{type(e).__name__}: {e}"
                     break
                 except Exception as e:  # noqa: BLE001 -- never kill serving

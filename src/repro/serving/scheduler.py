@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.stitch import StitchedFunction, stitched_jit
 from repro.models.model import Model
+from repro.runtime.canary import CanaryController
 
 from .buckets import Buckets, pad_tokens
 
@@ -82,6 +83,15 @@ class ServeStats:
     verify_failures: int = 0   # ...that mismatched
     tuner_failed: int = 0      # background tuning jobs that failed
     tuner_last_error: str = ""  # most recent tuner failure, verbatim
+    # -- canary loop (live-traffic shadow sampling + plan health) -------------
+    canaried: int = 0          # dispatches the canary shadow-verified
+    canary_mismatches: int = 0  # ...that diverged (reference served)
+    canary_skipped_budget: int = 0  # sampled verifies the budget refused
+    canary_quarantines: int = 0  # signatures tripped to quarantined
+    canary_probations: int = 0   # quarantined -> probation transitions
+    canary_readmits: int = 0     # probation -> healthy re-admissions
+    canary_baseline_serves: int = 0  # quarantined-state baseline serves
+    canary_overhead_pct: float = 0.0  # budgeted verify cost / serve cost
     # -- latency samples ------------------------------------------------------
     ttft_s: list = field(default_factory=list)   # submit -> first token
     wave_s: list = field(default_factory=list)   # per decode wave
@@ -125,16 +135,25 @@ class ServeStats:
         return _pct(self.wave_s, 99)
 
     def summary(self) -> str:
-        return (f"{self.prefills} prefills, {self.decode_waves} decode "
-                f"waves, {self.tokens_out} tokens | shape hit rate "
-                f"{self.hit_rate:.1%} ({self.replans} replans) | "
-                f"plan-cache {self.plan_cache_hits}h/"
-                f"{self.plan_cache_misses}m | ttft p50/p99 "
-                f"{self.p50_ttft_s * 1e3:.1f}/{self.p99_ttft_s * 1e3:.1f}ms"
-                f" | tok p50/p99 {self.p50_tok_s * 1e3:.1f}/"
-                f"{self.p99_tok_s * 1e3:.1f}ms | "
-                f"{self.tok_per_s:.1f} tok/s "
-                f"({self.tok_per_s_steady:.1f} steady)")
+        out = (f"{self.prefills} prefills, {self.decode_waves} decode "
+               f"waves, {self.tokens_out} tokens | shape hit rate "
+               f"{self.hit_rate:.1%} ({self.replans} replans) | "
+               f"plan-cache {self.plan_cache_hits}h/"
+               f"{self.plan_cache_misses}m | ttft p50/p99 "
+               f"{self.p50_ttft_s * 1e3:.1f}/{self.p99_ttft_s * 1e3:.1f}ms"
+               f" | tok p50/p99 {self.p50_tok_s * 1e3:.1f}/"
+               f"{self.p99_tok_s * 1e3:.1f}ms | "
+               f"{self.tok_per_s:.1f} tok/s "
+               f"({self.tok_per_s_steady:.1f} steady)")
+        if self.canaried or self.canary_quarantines \
+                or self.canary_baseline_serves:
+            out += (f" | canary {self.canaried}v/"
+                    f"{self.canary_mismatches}x "
+                    f"q{self.canary_quarantines}/"
+                    f"p{self.canary_probations}/"
+                    f"r{self.canary_readmits} "
+                    f"{self.canary_overhead_pct:.2f}%")
+        return out
 
 
 class ContinuousBatcher:
@@ -146,7 +165,8 @@ class ContinuousBatcher:
                  autotune: bool = False,
                  background=None,
                  donate: bool | None = None,
-                 pad_id: int = 0):
+                 pad_id: int = 0,
+                 canary=None):
         self.mdl = mdl
         self.params = params
         self.n_slots = n_slots
@@ -168,6 +188,11 @@ class ContinuousBatcher:
             donate = jax.default_backend() != "cpu"
         self._seen_shapes: set[tuple] = set()
         self._background = background  # tuner stats surface on ServeStats
+        # one canary controller shared by prefill + decode: the overhead
+        # budget is per serving process, not per dispatch callable.
+        if canary is None and self.stitched:
+            canary = CanaryController.from_env(plan_cache)
+        self._canary = canary if self.stitched else None
 
         one = mdl.init_cache(1, max_len)
         self.cache = jax.tree_util.tree_map(
@@ -190,7 +215,7 @@ class ContinuousBatcher:
         if self.stitched:
             self._prefill = stitched_jit(
                 prefill_fn, plan_cache=plan_cache, autotune=autotune,
-                background=background)
+                background=background, canary=self._canary)
             # donate exactly the cache leaves of the wave's flat
             # signature (params..., cache..., toks, poss): the stacked
             # KV/SSM cache updates in place across waves.
@@ -198,7 +223,7 @@ class ContinuousBatcher:
             n_c = len(jax.tree_util.tree_leaves(self.cache))
             self._decode_wave = stitched_jit(
                 wave, plan_cache=plan_cache, autotune=autotune,
-                background=background,
+                background=background, canary=self._canary,
                 donate_argnums=(tuple(range(n_p, n_p + n_c))
                                 if donate else None))
         else:
@@ -282,6 +307,16 @@ class ContinuousBatcher:
         if tstats is not None:
             self.stats.tuner_failed = getattr(tstats, "failed", 0)
             self.stats.tuner_last_error = getattr(tstats, "last_error", "")
+        if self._canary is not None:
+            cs = self._canary.stats
+            self.stats.canaried = cs.verified
+            self.stats.canary_mismatches = cs.mismatches
+            self.stats.canary_skipped_budget = cs.skipped_budget
+            self.stats.canary_quarantines = cs.quarantines
+            self.stats.canary_probations = cs.probations
+            self.stats.canary_readmits = cs.readmits
+            self.stats.canary_baseline_serves = cs.baseline_serves
+            self.stats.canary_overhead_pct = self._canary.overhead_pct
 
     def _fill_slots(self) -> None:
         for i in range(self.n_slots):

@@ -17,6 +17,15 @@ named injection points the pipeline consults at its fault-prone seams:
                         check (bad / non-divisible PartitionSpec), so
                         that group degrades to the per-pattern rung
                         while sibling groups stay stitched
+  ``verify_flake``      the canary's shadow verification reports a
+                        mismatch (intermittent with ``times=N``); the
+                        site passes ``seam=serve`` / ``seam=burn_in``
+                        so a spec can target live traffic or the
+                        hot-swap burn-in specifically
+  ``swap_crash``        a background rerace crashes at the hot-swap
+                        commit seam (after the race, before the swap)
+  ``health_corrupt``    a ``PlanHealth`` save writes a torn/garbage
+                        ``health.json`` (recovered on next load)
 
 Faults are armed either via the ``REPRO_FAULTS`` environment variable
 or programmatically with the ``inject`` context manager (tests).  The
@@ -48,7 +57,8 @@ ENV_FAULTS = "REPRO_FAULTS"
 
 #: The named injection points the pipeline consults.
 POINTS = ("emit_fail", "anchor_emit_fail", "cache_corrupt", "race_crash",
-          "numeric_mismatch", "tuner_hang", "shard_spec_fail")
+          "numeric_mismatch", "tuner_hang", "shard_spec_fail",
+          "verify_flake", "swap_crash", "health_corrupt")
 
 #: Spec keys that configure the fault itself rather than match context.
 _CONFIG_KEYS = ("times", "sleep")

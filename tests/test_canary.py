@@ -1,0 +1,412 @@
+"""Production canary loop: plan health, quarantine/probation lifecycle,
+poison un-pinning, burn-in gated hot-swap, and the restart-budget fix.
+
+The paper's 4-month unattended deployment claim needs the full cycle
+proven end to end: a signature that starts mis-computing on live
+traffic must be caught (shadow sample), retired (quarantine + poison +
+cache evict), re-tried (probation), and re-admitted (un-poison +
+re-persist) once the fault clears -- with every response served to the
+client numerically correct throughout, and the state machine surviving
+both a process restart and corruption of its own persistence.
+"""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StitchedFunction
+from repro.core.plan_cache import PlanCache
+from repro.runtime import (CanaryController, GuardError, PlanHealth,
+                           PoisonList, RestartableLoop, RetryPolicy,
+                           RUNG_PATTERNS)
+from repro.runtime.canary import (DEGRADED, HEALTHY, PROBATION, QUARANTINED)
+from repro.serving import BackgroundTuner
+from repro.serving.scheduler import ServeStats
+from repro.testing import faults
+
+rng = np.random.default_rng(7)
+
+
+def _ln(x, g, b):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * g + b
+
+
+def _deep(x, g, b):
+    for _ in range(4):
+        x = _ln(x, g, b)
+        x = jax.nn.gelu(x, approximate=True) + x
+    return x
+
+
+def _args(R=8, C=128):
+    return (rng.standard_normal((R, C)).astype(np.float32),
+            (np.abs(rng.standard_normal(C)) + 0.5).astype(np.float32),
+            rng.standard_normal(C).astype(np.float32))
+
+
+def _ctrl(tmp_path, **over):
+    """A tight-knobbed controller: every call sampled, trip after two
+    windowed failures, probation after two baselines, re-admit after
+    two clean canaries, effectively unlimited budget."""
+    kw = dict(sample=1, window=4, threshold=0.5, probation=2, burnin=2,
+              budget=10.0)
+    kw.update(over)
+    return CanaryController(str(tmp_path), **kw)
+
+
+def _check(out, ref):
+    for got, want in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# -- PlanHealth persistence ----------------------------------------------------
+def test_plan_health_round_trip(tmp_path):
+    ph = PlanHealth(str(tmp_path))
+    assert ph.state_of("absent") == HEALTHY         # missing entry = healthy
+    ph.update("sig1", state=QUARANTINED, reason="test", quarantines=1)
+    ph.update("sig2", state=PROBATION)
+    assert len(ph) == 2 and "sig1" in ph
+    fresh = PlanHealth(str(tmp_path))               # a new process
+    assert fresh.state_of("sig1") == QUARANTINED
+    assert fresh.state_of("sig2") == PROBATION
+    e = fresh.get("sig1")
+    assert e["reason"] == "test" and e["quarantines"] == 1 and "time" in e
+    assert fresh.recovered == 0
+
+
+def test_plan_health_torn_file_quarantined_and_rebuilt(tmp_path):
+    path = os.path.join(str(tmp_path), PlanHealth.FILENAME)
+    with open(path, "w") as f:
+        f.write('{"format": 1, "entr')            # torn mid-write
+    ph = PlanHealth(str(tmp_path))
+    assert ph.recovered == 1 and len(ph) == 0
+    assert "JSONDecodeError" in ph.last_error
+    # evidence moved aside, store rebuilt and usable
+    assert any(n.startswith(f"{PlanHealth.FILENAME}.corrupt.")
+               for n in os.listdir(str(tmp_path)))
+    ph.update("sig", state=HEALTHY)
+    assert PlanHealth(str(tmp_path)).state_of("sig") == HEALTHY
+
+    # a wrong checksum (tampered / interleaved write) recovers the same way
+    with open(path, "w") as f:
+        f.write('{"format": 1, "entries": {"s": {"state": "quarantined"}}, '
+                '"checksum": "beef"}')
+    ph2 = PlanHealth(str(tmp_path))
+    assert ph2.recovered == 1 and "s" not in ph2
+    assert "checksum" in ph2.last_error
+
+
+def test_plan_health_corrupt_fault_point(tmp_path):
+    with faults.inject("health_corrupt") as plan:
+        ph = PlanHealth(str(tmp_path))
+        ph.update("sig", state=QUARANTINED)        # save writes torn
+        assert plan.get("health_corrupt").fired == 1
+    fresh = PlanHealth(str(tmp_path))
+    assert fresh.recovered == 1 and len(fresh) == 0
+
+
+# -- PoisonList cap + unpin ----------------------------------------------------
+def test_poison_list_cap_and_unpin(tmp_path, monkeypatch):
+    pl = PoisonList(str(tmp_path), max_entries=3)
+    for i in range(5):
+        pl.pin(f"s{i}", reason=f"r{i}")
+        time.sleep(0.002)                          # distinct timestamps
+    assert len(pl) == 3
+    assert "s0" not in pl and "s1" not in pl       # oldest evicted first
+    assert all(f"s{i}" in pl for i in (2, 3, 4))
+
+    assert pl.unpin("s3") is True
+    assert "s3" not in pl
+    assert pl.unpin("s3") is False                 # already lifted
+    fresh = PoisonList(str(tmp_path))              # persisted removal
+    assert "s3" not in fresh and "s4" in fresh
+
+    monkeypatch.setenv(PoisonList.ENV_MAX, "2")
+    assert PoisonList(str(tmp_path / "env")).max_entries == 2
+
+
+def test_plan_cache_readmit_lifts_pin(tmp_path):
+    pc = PlanCache(str(tmp_path))
+    pc.poison.pin("sig", reason="verify mismatch")
+    assert pc.load("sig") is None                  # poisoned: always a miss
+    assert pc.readmit("sig") is True
+    assert "sig" not in pc.poison
+    assert pc.stats()["readmitted"] == 1
+    assert pc.readmit("sig") is False              # nothing left to lift
+
+
+def test_plan_cache_eviction_spares_health_file(tmp_path):
+    pc = PlanCache(str(tmp_path), max_entries=1, evict_grace_s=0.0)
+    pc.poison.pin("p", reason="x")                 # creates poison.json
+    PlanHealth(str(tmp_path)).update("h", state=HEALTHY)  # health.json
+    pc.store("sig_a", {"signature": "sig_a"})
+    time.sleep(0.02)
+    pc.store("sig_b", {"signature": "sig_b"})      # evicts sig_a (LRU)
+    names = set(os.listdir(str(tmp_path)))
+    assert PoisonList.FILENAME in names
+    assert PlanHealth.FILENAME in names            # never an LRU victim
+    assert "sig_a.json" not in names and "sig_b.json" in names
+
+
+# -- controller units ----------------------------------------------------------
+def test_controller_env_construction(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_CANARY", raising=False)
+    assert CanaryController.from_env(str(tmp_path)) is None
+    monkeypatch.setenv("REPRO_CANARY", "1")
+    monkeypatch.setenv("REPRO_CANARY_SAMPLE", "5")
+    monkeypatch.setenv("REPRO_CANARY_THRESHOLD", "0.75")
+    ctrl = CanaryController.from_env(str(tmp_path))
+    assert ctrl is not None and ctrl.sample == 5 \
+        and ctrl.threshold == 0.75
+    assert ctrl.health.root == str(tmp_path)
+    # a PlanCache is accepted as the root carrier
+    ctrl2 = CanaryController.from_env(PlanCache(str(tmp_path)))
+    assert ctrl2.health.root == str(tmp_path)
+
+    # StitchedFunction auto-creates from the env, forward path only
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path))
+    assert sf._canary is not None
+    monkeypatch.delenv("REPRO_CANARY")
+    assert StitchedFunction(_deep)._canary is None
+
+
+def test_register_states(tmp_path):
+    ctrl = _ctrl(tmp_path)
+    assert ctrl.register("sA") == HEALTHY
+    assert ctrl.register("sB", poisoned_reason="old pin") == QUARANTINED
+    assert ctrl.register("sC", rung=RUNG_PATTERNS) == DEGRADED
+    # an existing entry wins over a fresh registration (restart case)
+    assert ctrl.register("sB") == QUARANTINED
+    fresh = PlanHealth(str(tmp_path))
+    assert fresh.state_of("sB") == QUARANTINED
+    assert fresh.state_of("sC") == DEGRADED
+
+
+def test_probation_single_flight(tmp_path):
+    ctrl = _ctrl(tmp_path)
+    assert ctrl._acquire_probation("s") is True
+    assert ctrl._acquire_probation("s") is False   # one canary at a time
+    ctrl._release_probation("s")
+    assert ctrl._acquire_probation("s") is True
+
+
+def test_serve_stats_canary_summary():
+    s = ServeStats()
+    assert "canary" not in s.summary()             # quiet when inactive
+    s.canaried, s.canary_mismatches = 7, 2
+    s.canary_quarantines, s.canary_probations, s.canary_readmits = 1, 1, 1
+    s.canary_overhead_pct = 1.25
+    out = s.summary()
+    assert "canary 7v/2x" in out and "q1/p1/r1" in out and "1.25%" in out
+
+
+# -- the full lifecycle on live traffic ---------------------------------------
+def test_chaos_lifecycle_quarantine_then_readmit(tmp_path):
+    """healthy -> quarantined -> probation -> (relapse) -> ... ->
+    healthy, every served output correct throughout, pin lifted and
+    plan re-persisted at the end."""
+    ctrl = _ctrl(tmp_path)
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path), canary=ctrl)
+    args = _args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+    sig = sf.report(*args).signature
+    assert ctrl.state_of(sig) == HEALTHY
+
+    seen = set()
+    with faults.inject("verify_flake:times=4") as plan:
+        for _ in range(16):
+            _check(sf(*args), ref)                 # NEVER a wrong answer
+            seen.add(ctrl.state_of(sig))
+        assert plan.get("verify_flake").remaining == 0
+    for _ in range(8):                             # fault cleared: recover
+        _check(sf(*args), ref)
+        seen.add(ctrl.state_of(sig))
+
+    assert QUARANTINED in seen and PROBATION in seen
+    assert ctrl.state_of(sig) == HEALTHY           # full cycle closed
+    assert ctrl.stats.quarantines >= 1
+    assert ctrl.stats.readmits >= 1
+    assert ctrl.stats.mismatches >= 2
+    assert ctrl.stats.baseline_serves >= 1
+    rep = sf.reports()[0]
+    assert rep.verify_failures >= 2
+    assert not rep.quarantined                     # cleared on re-admission
+    # the pin was lifted and the clean plan re-persisted
+    assert sig not in PoisonList(str(tmp_path))
+    assert PlanCache(str(tmp_path)).load(sig) is not None
+    assert PlanHealth(str(tmp_path)).get(sig)["readmits"] >= 1
+
+
+def test_lifecycle_survives_process_restart(tmp_path):
+    """Quarantine in process 1; process 2 (fresh controller + fresh
+    StitchedFunction on the same root) must resume from QUARANTINED,
+    serve the baseline, and still re-admit through probation."""
+    args = _args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+
+    ctrl1 = _ctrl(tmp_path)
+    sf1 = StitchedFunction(_deep, plan_cache=str(tmp_path), canary=ctrl1)
+    sig = sf1.report(*args).signature
+    with faults.inject("verify_flake:times=2"):
+        _check(sf1(*args), ref)
+        _check(sf1(*args), ref)
+    assert ctrl1.state_of(sig) == QUARANTINED
+    assert sig in PoisonList(str(tmp_path))
+
+    # "restart": everything rebuilt from disk
+    ctrl2 = _ctrl(tmp_path)
+    sf2 = StitchedFunction(_deep, plan_cache=str(tmp_path), canary=ctrl2)
+    _check(sf2(*args), ref)                        # compile adopts the state
+    assert ctrl2.state_of(sig) == QUARANTINED      # ...persisted, not reset
+    assert ctrl2.stats.baseline_serves >= 1
+    for _ in range(5):
+        _check(sf2(*args), ref)
+    assert ctrl2.state_of(sig) == HEALTHY
+    assert ctrl2.stats.readmits == 1
+    assert sig not in PoisonList(str(tmp_path))
+    # the restart compile was refused a store (poisoned) but kept its
+    # payload: re-admission re-persisted the plan for later processes
+    assert PlanCache(str(tmp_path)).load(sig) is not None
+
+
+def test_budget_governor_skips_verifies(tmp_path):
+    """A starved budget must shed sampled verifies (counting them), not
+    slow serving: only the exempt first-call verify (plus at most the
+    one bootstrap verify the leaky bucket's first deposit affords) may
+    run."""
+    ctrl = _ctrl(tmp_path, budget=1e-6)
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path), canary=ctrl)
+    args = _args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+    for _ in range(12):
+        _check(sf(*args), ref)
+    assert ctrl.stats.verified <= 2
+    assert ctrl.stats.skipped_budget >= 9
+    assert ctrl.stats.mismatches == 0
+    assert ctrl.overhead_pct < 100.0               # governed figure sane
+
+
+def test_hot_swap_refused_for_quarantined_signature(tmp_path, monkeypatch):
+    """rerace racing a quarantine on the same signature: the canary's
+    trip pins the poison list synchronously, so the (later) swap must
+    refuse and leave the old compiled instance in place."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+
+    class FakeTuner:                               # records, never runs:
+        def __init__(self):                        # the race stays pending
+            self.jobs = []
+
+        def submit(self, job, key=None):
+            self.jobs.append(job)
+
+    tuner = FakeTuner()
+    ctrl = _ctrl(tmp_path)
+    sf = StitchedFunction(_deep, plan_cache=str(tmp_path), canary=ctrl,
+                          autotune=True, background=tuner)
+    args = _args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+    with faults.inject("verify_flake:times=2"):
+        _check(sf(*args), ref)
+        _check(sf(*args), ref)
+    sig = sf.reports()[0].signature
+    assert ctrl.state_of(sig) == QUARANTINED
+    assert len(tuner.jobs) == 1                    # the race was queued...
+    (key,) = sf._cache.keys()
+    compiled = sf._cache[key]
+    assert sf.rerace(key) is None                  # ...but must not commit
+    assert sf._cache[key] is compiled              # old instance stays
+
+
+def test_measured_plan_burn_in_gates_hot_swap(tmp_path, monkeypatch):
+    """A background-tuned rebuild that fails its canary burn-in must not
+    swap in: the tuner records the failure without retrying (the verdict
+    is deterministic), the measured entry is evicted, and the signature
+    is neither poisoned nor quarantined -- the live analytic plan is
+    fine."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "force")
+    ctrl = _ctrl(tmp_path)
+    args = _args()
+    ref = _deep(*(jnp.asarray(a) for a in args))
+    with BackgroundTuner(retry=RetryPolicy(max_retries=2)) as tuner:
+        sf = StitchedFunction(_deep, plan_cache=str(tmp_path), canary=ctrl,
+                              autotune=True, background=tuner)
+        # seam=burn_in: live serve-path verifies are NOT matched, only
+        # the burn-in's fire site -- the flake targets the gate alone.
+        with faults.inject("verify_flake:seam=burn_in,times=-1") as plan:
+            _check(sf(*args), ref)
+            assert tuner.drain(timeout=120)
+            assert plan.get("verify_flake").fired >= 1
+        assert tuner.stats.failed == 1
+        assert tuner.stats.retries == 0            # deterministic: no retry
+        assert tuner.stats.swaps == 0
+        assert "burn-in" in tuner.stats.last_error
+    rep = sf.reports()[0]
+    assert rep.partition_source != "measured"      # swap refused
+    assert not rep.quarantined
+    sig = rep.signature
+    assert sig not in PoisonList(str(tmp_path))    # analytic plan is fine
+    assert PlanCache(str(tmp_path)).load(sig) is None  # measured evicted
+    assert ctrl.state_of(sig) == HEALTHY
+    assert ctrl.stats.burnin_failures >= 1
+    _check(sf(*args), ref)                         # serving unaffected
+
+
+# -- restart-budget fix (LoopStats) -------------------------------------------
+def test_run_with_restarts_budget_resets_on_forward_progress(tmp_path):
+    from repro.data import DataState
+
+    class Data:
+        def __init__(self):
+            self.state = DataState(0, 0)
+
+        def batch_at(self, step):
+            return {"x": np.full((2,), float(step), np.float32)}
+
+        def restore(self, st):
+            self.state = st
+
+    def step(state, batch):
+        return {"acc": state["acc"] + batch["x"].sum(), "n": state["n"] + 1}
+
+    init = lambda: {"acc": np.float32(0), "n": np.int64(0)}  # noqa: E731
+    ref, _ = RestartableLoop(str(tmp_path / "ref"), ckpt_every=2,
+                             async_io=False).run(init(), Data(), step, 17)
+
+    crashed: set[int] = set()
+
+    def flaky(state, batch):
+        s = int(state["n"])
+        if s in (4, 9, 14) and s not in crashed:   # 3 distinct transient
+            crashed.add(s)                         # crashes, far apart
+            raise RuntimeError(f"transient crash at step {s}")
+        return step(state, batch)
+
+    # 3 crashes against max_restarts=2 only succeeds because each
+    # restart resumes from a LATER checkpoint, refilling the budget --
+    # the pre-fix loop counted attempts per job and exhausted here.
+    got, stats = RestartableLoop(str(tmp_path / "x"), ckpt_every=2,
+                                 async_io=False).run_with_restarts(
+        init(), Data(), flaky, 17, max_restarts=2,
+        retry=RetryPolicy(max_retries=2, backoff_s=0.0))
+    assert float(got["acc"]) == float(ref["acc"])
+    assert stats.restarts == 3
+    assert stats.budget_resets >= 2
+    assert stats.last_resume >= 8                  # final resume advanced
+    assert isinstance(stats.flagged_steps, list)
+
+    def always_bad(state, batch):
+        raise ValueError("deterministic poison")
+
+    # no forward progress -> the budget must still exhaust (no change)
+    with pytest.raises(GuardError):
+        RestartableLoop(str(tmp_path / "bad"), ckpt_every=2,
+                        async_io=False).run_with_restarts(
+            init(), Data(), always_bad, 17, max_restarts=2,
+            retry=RetryPolicy(max_retries=2, backoff_s=0.0))

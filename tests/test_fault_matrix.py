@@ -91,6 +91,9 @@ _KNOBS = {
     "tuner_hang": {"REPRO_AUTOTUNE": "force", "REPRO_RACE_TIMEOUT_S": "1",
                    "_sleep": "4"},
     "shard_spec_fail": {},
+    "verify_flake": {"REPRO_CANARY": "1"},
+    "swap_crash": {"REPRO_AUTOTUNE": "force"},
+    "health_corrupt": {"REPRO_CANARY": "1"},
 }
 
 
@@ -120,10 +123,12 @@ def test_fault_matrix_pipeline_completes_correctly(point, monkeypatch,
         fn = ref_fn = _anchored_deep
         args = args + (rng.standard_normal((256, 64)).astype(np.float32),
                        rng.standard_normal((32, 128)).astype(np.float32))
-    elif point == "shard_spec_fail":
+    elif point in ("shard_spec_fail", "verify_flake"):
         # the sharded emission path needs an *explicit* ShardCtx, which
         # a (1, 1) host mesh with replicated specs provides on a single
-        # device (explicitness is about specs, not device count).
+        # device (explicitness is about specs, not device count).  The
+        # canary flake runs on this arm too: live-traffic shadow
+        # verification must hold on the sharded pipeline.
         from jax.sharding import PartitionSpec as P
 
         from repro.launch.mesh import make_test_mesh
@@ -132,12 +137,24 @@ def test_fault_matrix_pipeline_completes_correctly(point, monkeypatch,
         args = (rng.standard_normal((16, 256)).astype(np.float32),)
         sf_kwargs = {"mesh": make_test_mesh(1), "in_specs": (P(),),
                      "out_specs": (P(),)}
+    elif point == "swap_crash":
+        # the hot-swap commit seam only exists on the background rerace
+        # path: a real tuner, whose default retry policy re-runs the
+        # crashed job -- the first attempt dies AT the commit (after
+        # the race, before the swap), the retry must land the swap.
+        from repro.serving import BackgroundTuner
+
+        sf_kwargs = {"background": BackgroundTuner()}
     ref = ref_fn(*(jnp.asarray(a) for a in args))
     autotune = knobs.get("REPRO_AUTOTUNE") == "force"
     sf = StitchedFunction(fn, plan_cache=str(tmp_path),
                           autotune=autotune, **sf_kwargs)
     out = sf(*args)
     out2 = sf(*args)                       # recovery path runs clean too
+    tuner = sf_kwargs.get("background")
+    if tuner is not None:  # the fault fires on the tuner thread: wait
+        assert tuner.drain(timeout=120)
+        tuner.close()
     rep = sf.reports()[0]
 
     for o in (out, out2):
@@ -190,5 +207,32 @@ def test_fault_matrix_pipeline_completes_correctly(point, monkeypatch,
         assert rep.n_groups >= 2
         assert len(rep.fallbacks) == 1
         assert PlanCache(str(tmp_path)).load(rep.signature) is None
+    elif point == "verify_flake":
+        # one flaky sample on the sharded pipeline: the mismatch was
+        # recorded and the reference served, but hysteresis (min two
+        # windowed failures) means a single flake never quarantines.
+        from repro.runtime.canary import HEALTHY, PlanHealth
+
+        assert rep.sharded
+        assert rep.verify_failures >= 1
+        assert not rep.quarantined
+        assert PlanHealth(str(tmp_path)).state_of(rep.signature) == HEALTHY
+    elif point == "swap_crash":
+        # the crash at the commit seam was contained (retried in place,
+        # not propagated) and the retry committed the hot swap.
+        assert tuner.stats.retries >= 1
+        assert tuner.stats.failed == 0
+        assert tuner.stats.swaps == 1
+    elif point == "health_corrupt":
+        # the torn health.json is quarantined-and-rebuilt on next load,
+        # exactly like a torn plan-cache entry: evidence moved aside,
+        # store comes back empty, nothing raises.
+        from repro.runtime.canary import PlanHealth
+
+        health = PlanHealth(str(tmp_path))
+        assert health.recovered == 1
+        assert len(health) == 0
+        assert any(n.startswith(f"{PlanHealth.FILENAME}.corrupt.")
+                   for n in os.listdir(tmp_path))
 
     faults.reset("")  # disarm: later tests must not inherit the spec
